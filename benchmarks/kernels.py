@@ -1,0 +1,57 @@
+"""Kernel micro-benchmarks (CPU wall-time of the dispatched ops +
+interpret-mode correctness spot checks).  On TPU these run the Pallas
+kernels; here they time the jnp stand-ins, establishing the harness."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _bench(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run(print_rows=True):
+    rng = np.random.default_rng(0)
+    rows = []
+
+    x = jnp.asarray(rng.normal(size=(2048, 2)), jnp.float32)
+    mask = jnp.ones(2048, bool)
+    us = _bench(lambda x: ops.neighbor_count(x, mask, 0.05), x)
+    flops = 2048 * 2048 * 2 * 2
+    rows.append(("neighbor_count_2048", us, f"{flops/us/1e3:.2f}GF/s"))
+
+    q = jnp.asarray(rng.normal(size=(1, 8, 1024, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 2, 1024, 64)), jnp.bfloat16)
+    us = _bench(lambda q, k: ops.flash_attention(q, k, k, causal=True), q, k)
+    flops = 2 * 2 * 8 * 1024 * 1024 * 64 / 2
+    rows.append(("flash_attn_1k_gqa", us, f"{flops/us/1e3:.2f}GF/s"))
+
+    xs = jnp.asarray(rng.normal(size=(1, 4096, 8, 32)), jnp.float32)
+    a = jnp.asarray(-np.abs(rng.normal(size=(1, 4096, 8))) * 0.1, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(1, 4096, 8, 16)), jnp.float32)
+    us = _bench(lambda xs, a, b: ops.ssd_scan(xs, a, b, b), xs, a, b)
+    rows.append(("ssd_scan_4k", us, ""))
+
+    jit_jnp = jax.jit(lambda x: ref.pairwise_dist_sq(x, x))
+    us = _bench(jit_jnp, x)
+    rows.append(("pairwise_ref_2048", us, ""))
+
+    if print_rows:
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+    return [{"name": n, "us_per_call": u, "derived": d} for n, u, d in rows]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,69 @@
+"""Benchmark driver — one section per paper table/figure + kernel
+microbenches.  Prints human tables followed by a machine-readable
+``name,us_per_call,derived`` CSV summary."""
+from __future__ import annotations
+
+import json
+
+
+def main() -> None:
+    from benchmarks import comm_volume, kernels, scalability, scenarios, speedup
+
+    print("#" * 72)
+    print("# Paper Tables 3-6 — sync vs async, scenarios I-IV (simulator)")
+    print("#" * 72)
+    scen_rows = scenarios.run()
+
+    print()
+    print("#" * 72)
+    print("# Paper §5.5 — speedup vs sequential DBSCAN")
+    print("#" * 72)
+    sp_rows = speedup.run()
+
+    print()
+    print("#" * 72)
+    print("# Paper Figs 4-5 — scalability vs number of machines")
+    print("#" * 72)
+    sc_rows = scalability.run()
+
+    print()
+    print("#" * 72)
+    print("# Paper §3.1 — contour data reduction / wire bytes")
+    print("#" * 72)
+    cv_rows = comm_volume.run()
+
+    print()
+    print("#" * 72)
+    print("# MoE dispatch: epsum vs a2a vs a2a+int8 (beyond-paper, §Perf B)")
+    print("#" * 72)
+    from benchmarks import moe_dispatch
+    md_rows = moe_dispatch.run()
+
+    print()
+    print("#" * 72)
+    print("# Kernel microbenches")
+    print("#" * 72)
+    k_rows = kernels.run(print_rows=False)
+
+    print()
+    print("name,us_per_call,derived")
+    for r in scen_rows:
+        print(f"{r['name']},{r['async_ms']*1e3:.0f},"
+              f"async/sync={r['ratio']:.3f}|paper={r['paper_ratio']:.3f}")
+    for r in sp_rows:
+        extra = f"speedup={r['speedup']:.1f}x"
+        print(f"{r['name']},{r.get('ddc_ms', 0)*1e3:.0f},{extra}")
+    for r in sc_rows:
+        if r["name"].startswith("optimal"):
+            print(f"{r['name']},0,opt_machines={r['machines']}")
+    for r in cv_rows:
+        if "hull_frac" in r:
+            print(f"{r['name']},0,hull={r['hull_frac']:.3%}|grid={r['grid_frac']:.3%}")
+    for r in k_rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    for r in md_rows:
+        print(f"moe_dispatch_{r['impl']},0,coll_bytes={r['coll_bytes']:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Paper Figures 4-5: execution time vs number of machines for D1 (10k)
+and D2 (30k points); phase-1 falls, phase-2 rises, total has an interior
+optimum that moves right with dataset size."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import simulate as sim
+
+
+def run(print_rows=True):
+    base = sim.PAPER_MACHINES[0]
+    rows = []
+    for dset, n in (("D1", 10_000), ("D2", 30_000)):
+        if print_rows:
+            print(f"\n== {dset} ({n} points) — log2(time ms) vs machines ==")
+            print(f"{'machines':>8} {'phase1':>10} {'phase2':>10} {'total':>10}")
+        times = []
+        counts = [1, 2, 4, 8, 16, 32, 64]
+        for k in counts:
+            machines = [dataclasses.replace(base, name=f"m{i}") for i in range(k)]
+            sizes = [n // k] * k
+            r = sim.simulate(machines, sizes, "async")
+            p1 = max(r.step1)
+            total = r.makespan
+            p2 = total - p1
+            times.append(total)
+            if print_rows:
+                print(f"{k:>8} {np.log2(max(p1,1)):>10.2f} "
+                      f"{np.log2(max(p2,1)):>10.2f} {np.log2(total):>10.2f}")
+            rows.append({"name": f"scalability_{dset}", "machines": k,
+                         "phase1_ms": p1, "phase2_ms": p2, "total_ms": total})
+        opt = counts[int(np.argmin(times))]
+        if print_rows:
+            print(f"optimal machines for {dset}: {opt} "
+                  f"(paper: 8 for D1, 16 for D2)")
+        rows.append({"name": f"optimal_{dset}", "machines": opt})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

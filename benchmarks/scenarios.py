@@ -1,0 +1,46 @@
+"""Paper Tables 3-6: per-machine step1/step2/total under sync vs async
+communications, scenarios I-IV, on the calibrated heterogeneous-cluster
+simulator (core/simulate.py).  Emits one table per scenario."""
+from __future__ import annotations
+
+from repro.core import partitioner, simulate as sim
+
+PAPER_TOTALS = {  # (sync, async) total exec time, ms — from the paper
+    "I": (22374, 21824),
+    "II": (22243, 21865),
+    "III": (57248, 57186),
+    "IV": (1761, 1772),
+}
+
+
+def run(print_rows=True) -> list[dict]:
+    rows = []
+    for scen in ("I", "II", "III", "IV"):
+        sizes = partitioner.scenario_sizes(scen)
+        s = sim.simulate(sim.PAPER_MACHINES, sizes, "sync")
+        a = sim.simulate(sim.PAPER_MACHINES, sizes, "async")
+        if print_rows:
+            print(f"\n== Scenario {scen} (sizes={sizes}) ==")
+            print(f"{'machine':>8} {'DS':>6} | {'sync s1':>8} {'sync s2':>8} "
+                  f"{'sync tot':>9} | {'async s1':>8} {'async s2':>8} {'async tot':>9}")
+            for i, m in enumerate(sim.PAPER_MACHINES):
+                print(f"{m.name[:8]:>8} {sizes[i]:>6} | {s.step1[i]:8.0f} "
+                      f"{s.step2[i]:8.0f} {s.total[i]:9.0f} | {a.step1[i]:8.0f} "
+                      f"{a.step2[i]:8.0f} {a.total[i]:9.0f}")
+            ps, pa = PAPER_TOTALS[scen]
+            print(f"   TOTAL          | sync {s.makespan:9.0f} (paper {ps}) | "
+                  f"async {a.makespan:9.0f} (paper {pa}) | "
+                  f"ratio {a.makespan/s.makespan:.3f} (paper {pa/ps:.3f})")
+        rows.append({
+            "name": f"scenario_{scen}",
+            "sync_ms": s.makespan, "async_ms": a.makespan,
+            "ratio": a.makespan / s.makespan,
+            "paper_ratio": PAPER_TOTALS[scen][1] / PAPER_TOTALS[scen][0],
+            "sync_idle_ms": sum(s.idle) / len(s.idle),
+            "async_idle_ms": sum(a.idle) / len(a.idle),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    run()

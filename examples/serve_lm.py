@@ -1,0 +1,27 @@
+"""Batched serving example: prefill + KV-cache decode over a batch of
+requests, with greedy and sampled generation.
+
+  PYTHONPATH=src python examples/serve_lm.py --requests 8 --gen 32
+"""
+import argparse
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+    serve_mod.main([
+        "--arch", args.arch, "--tiny",
+        "--requests", str(args.requests),
+        "--prompt-len", "32", "--gen", str(args.gen),
+        "--temperature", str(args.temperature),
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""DDC — the paper's primary contribution.
+
+- dbscan / kmeans: local clustering (phase 1 compute)
+- geometry: contours (the 1–2 % reduction) + overlap predicates
+- ddc: ClusterSet buffers, merge_pair, sync/async phase-2 schedules,
+  shard_map distributed entry point, host oracle
+- partitioner: block / random / spatial / capacity-aware splits
+- simulate: heterogeneous-cluster event simulator (paper Tables 3–6)
+"""
+from . import dbscan, ddc, geometry, kmeans, partitioner, simulate  # noqa: F401

@@ -1,0 +1,139 @@
+"""DBSCAN — the paper's local clustering algorithm, in two forms.
+
+* ``dbscan_ref`` — classic BFS DBSCAN in NumPy (the oracle; O(n^2) with
+  blockwise distance computation, matching the paper's complexity model).
+* ``dbscan`` — TPU-native JAX version: ε-neighbour counts and min-label
+  propagation are blocked matmuls (kernels/pairwise_dist.py), cluster
+  labels converge by fixed-point iteration under ``lax.while_loop``.
+
+Semantics (both): a point is *core* iff its ε-neighbourhood (self
+included) has >= min_pts points.  Core points within ε of each other share
+a cluster; border points adopt the smallest neighbouring core label;
+everything else is noise (-1).  Labels are canonicalised to the smallest
+point index in the cluster, so the two implementations agree exactly up
+to the tie-break rule for border points shared by several clusters —
+both use min-label, making outputs identical.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+NOISE = -1
+SENTINEL = 2**30
+
+
+def dbscan_ref(points: np.ndarray, eps: float, min_pts: int) -> np.ndarray:
+    """NumPy oracle.  Returns labels (n,) int32, noise = -1, labels are
+    the minimum point index of each cluster's core set."""
+    pts = np.asarray(points, dtype=np.float64)
+    n = len(pts)
+    if n == 0:
+        return np.zeros((0,), np.int32)
+    d2 = ((pts[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
+    adj = d2 <= eps * eps
+    counts = adj.sum(1)
+    core = counts >= min_pts
+
+    labels = np.full(n, SENTINEL, np.int64)
+    # Connected components over core points (edges between core pairs).
+    for i in range(n):
+        if not core[i] or labels[i] != SENTINEL:
+            continue
+        stack = [i]
+        labels[i] = i
+        while stack:
+            u = stack.pop()
+            for v in np.nonzero(adj[u] & core)[0]:
+                if labels[v] == SENTINEL:
+                    labels[v] = i
+                    stack.append(v)
+    # Canonicalise: min core index per component.
+    for comp in set(labels[core]):
+        members = np.nonzero(core & (labels == comp))[0]
+        labels[members] = members.min()
+    # Border points: min label among core neighbours.
+    for i in range(n):
+        if core[i]:
+            continue
+        neigh = np.nonzero(adj[i] & core)[0]
+        labels[i] = labels[neigh].min() if len(neigh) else SENTINEL
+    labels[labels == SENTINEL] = NOISE
+    return labels.astype(np.int32)
+
+
+class DBSCANResult(NamedTuple):
+    labels: jax.Array   # (n,) int32; -1 noise, else min core index
+    core: jax.Array     # (n,) bool
+    n_clusters: jax.Array  # () int32
+
+
+@functools.partial(jax.jit, static_argnames=("min_pts", "max_iters"))
+def dbscan(
+    points: jax.Array,
+    mask: jax.Array,
+    eps: float | jax.Array,
+    min_pts: int,
+    max_iters: int = 512,
+) -> DBSCANResult:
+    """TPU-native DBSCAN on a padded point buffer.
+
+    points: (n, d); mask: (n,) bool (padding excluded everywhere).
+    Label propagation: L_i <- min(L_i, min_{j in N(i) ∩ core} L_j) for core
+    i, iterated to fixed point.  Each sweep is a fused blocked matmul
+    (never materialises the n×n adjacency in HBM); sweep count is bounded
+    by the core-graph diameter and by ``max_iters``.
+    """
+    n = points.shape[0]
+    counts = ops.neighbor_count(points, mask, eps)
+    core = (counts >= min_pts) & mask
+
+    init = jnp.where(core, jnp.arange(n, dtype=jnp.int32), SENTINEL)
+
+    def cond(state):
+        labels, changed, it = state
+        return changed & (it < max_iters)
+
+    def body(state):
+        labels, _, it = state
+        swept = ops.min_label_sweep(points, mask, labels, core, eps)
+        new = jnp.where(core, jnp.minimum(labels, swept), labels)
+        return new, jnp.any(new != labels), it + 1
+
+    labels, _, _ = jax.lax.while_loop(
+        cond, body, (init, jnp.asarray(True), jnp.asarray(0, jnp.int32))
+    )
+
+    # Border points: min core-neighbour label (non-core, in-mask).
+    swept = ops.min_label_sweep(points, mask, labels, core, eps)
+    labels = jnp.where(core, labels, swept)
+    labels = jnp.where(mask & (labels < SENTINEL), labels, SENTINEL)
+
+    # Count clusters: labels that are their own index and core.
+    is_root = core & (labels == jnp.arange(n, dtype=jnp.int32))
+    n_clusters = jnp.sum(is_root.astype(jnp.int32))
+    labels = jnp.where(labels == SENTINEL, NOISE, labels)
+    return DBSCANResult(labels, core, n_clusters)
+
+
+def relabel_dense(labels: jax.Array, max_clusters: int) -> jax.Array:
+    """Map arbitrary min-index labels to dense ids [0, max_clusters) by
+    cluster-root order; -1 stays -1.  Clusters beyond the budget map to -1
+    (callers size ``max_clusters`` generously; overflow is reported by
+    ddc.py)."""
+    n = labels.shape[0]
+    is_root = labels == jnp.arange(n)
+    # Rank roots by index.
+    root_rank = jnp.cumsum(is_root.astype(jnp.int32)) - 1  # rank at root pos
+    dense_at_root = jnp.where(is_root, root_rank, 0)
+    safe = jnp.clip(labels, 0, n - 1)
+    dense = jnp.take(dense_at_root, safe)
+    dense = jnp.where(labels == NOISE, NOISE, dense)
+    dense = jnp.where(dense >= max_clusters, NOISE, dense)
+    return dense.astype(jnp.int32)

@@ -1,0 +1,560 @@
+"""Dynamic Distributed Clustering (DDC) — the paper's contribution.
+
+Phase 1 (SPMD, zero communication): every shard clusters its local points
+(DBSCAN or K-Means) and reduces each cluster to a fixed-size *contour*
+buffer — the paper's 1–2 % data-reduction step.
+
+Phase 2 (hierarchical aggregation): contour buffers are merged across
+shards.  Two schedules:
+
+* ``sync``  — barrier all-gather of every shard's contours, then one fold
+  (the paper's synchronous model: everyone waits for the slowest, then
+  merges).  Collective bytes per lane: (K-1)·B.
+* ``async`` — butterfly / recursive-doubling: log2(K) rounds of pairwise
+  ``ppermute`` exchange + merge; merge compute of round ℓ overlaps the
+  round ℓ+1 permute in XLA's schedule (the paper's asynchronous model:
+  neighbours merge as soon as both are ready).  Collective bytes per
+  lane: log2(K)·B.
+
+Both schedules produce identical global clusters (a paper claim we test).
+
+Static shapes throughout: a shard's clusters live in a ``ClusterSet``
+(C clusters × V contour vertices, padded + masked) so buffers can cross
+TPU collectives.  ``merge_pair`` returns slot-mappings so each shard can
+relabel its local points to global cluster ids without any extra
+communication.
+
+Host path: ``ddc_host`` (NumPy, exact polygon-overlap merge) is the
+paper-faithful oracle; ``dbscan_ref`` on the unpartitioned data is the
+sequential baseline T1 used for the speedup experiments.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dbscan as dbscan_mod
+from repro.core import geometry, kmeans
+from repro.kernels import ops
+
+SENTINEL = 2**30
+
+
+@dataclasses.dataclass(frozen=True)
+class DDCConfig:
+    """Static configuration of the DDC pipeline (hashable, jit-static)."""
+
+    eps: float = 0.05                  # DBSCAN radius (data units)
+    min_pts: int = 5
+    bounds: Tuple[float, float, float, float] = (0.0, 0.0, 1.0, 1.0)
+    grid: int = 128                    # contour raster resolution
+    max_clusters: int = 32             # C: per-shard cluster budget
+    max_verts: int = 128               # V: per-cluster contour budget
+    merge_eps: float | None = None     # contour-overlap distance; default eps
+    local_algo: str = "dbscan"         # "dbscan" | "kmeans"
+    kmeans_k: int = 8
+    schedule: str = "async"            # "sync" | "async" | "tree"
+    tree_degree: int = 2               # D for the paper's Algorithm-2 tree
+    merge_refine: str = "grid"         # "grid" | "fps"
+
+    @property
+    def merge_radius(self) -> float:
+        # Contours are grid-cell centres; two touching clusters' boundary
+        # cells are within one cell diagonal + eps of each other.
+        cell = max(
+            (self.bounds[2] - self.bounds[0]) / self.grid,
+            (self.bounds[3] - self.bounds[1]) / self.grid,
+        )
+        base = self.merge_eps if self.merge_eps is not None else self.eps
+        return base + 1.5 * cell
+
+    def buffer_bytes(self) -> int:
+        """Bytes a ClusterSet occupies on the wire (the 1–2 % claim)."""
+        c, v = self.max_clusters, self.max_verts
+        return c * v * 2 * 4 + c * 4 + c * 4 + c * 1 + 1
+
+
+class ClusterSet(NamedTuple):
+    """Fixed-size representation of a shard's clusters (network format)."""
+
+    contours: jax.Array  # (C, V, 2) f32 — padded contour vertices
+    counts: jax.Array    # (C,)     i32 — valid vertices per cluster
+    sizes: jax.Array     # (C,)     i32 — member-point counts
+    valid: jax.Array     # (C,)     bool
+    overflow: jax.Array  # ()       bool — cluster budget exceeded somewhere
+
+
+def empty_clusterset(cfg: DDCConfig) -> ClusterSet:
+    c, v = cfg.max_clusters, cfg.max_verts
+    return ClusterSet(
+        contours=jnp.zeros((c, v, 2), jnp.float32),
+        counts=jnp.zeros((c,), jnp.int32),
+        sizes=jnp.zeros((c,), jnp.int32),
+        valid=jnp.zeros((c,), bool),
+        overflow=jnp.asarray(False),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Phase 1 — local clustering + contour reduction
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def local_phase(
+    points: jax.Array, mask: jax.Array, cfg: DDCConfig, key: jax.Array | None = None
+) -> Tuple[jax.Array, ClusterSet]:
+    """Cluster a shard's points and reduce to contours.
+
+    Returns (dense local labels (n,), ClusterSet).  Zero communication.
+    """
+    n = points.shape[0]
+    c_budget = cfg.max_clusters
+    if cfg.local_algo == "dbscan":
+        res = dbscan_mod.dbscan(points, mask, cfg.eps, cfg.min_pts)
+        dense = dbscan_mod.relabel_dense(res.labels, c_budget)
+        n_clusters = res.n_clusters
+    elif cfg.local_algo == "kmeans":
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        km = kmeans.kmeans(key, points, mask, min(cfg.kmeans_k, c_budget))
+        dense = km.labels
+        n_clusters = jnp.asarray(min(cfg.kmeans_k, c_budget), jnp.int32)
+    else:  # pragma: no cover
+        raise ValueError(cfg.local_algo)
+
+    sizes = jnp.zeros((c_budget,), jnp.int32).at[jnp.clip(dense, 0)].add(
+        (dense >= 0).astype(jnp.int32), mode="drop"
+    )
+    valid = sizes > 0
+
+    def one_contour(cid):
+        m = mask & (dense == cid)
+        pts, cnt = geometry.extract_contour(
+            points, m, cfg.bounds, cfg.grid, cfg.max_verts
+        )
+        return pts, cnt
+
+    contours, counts = jax.vmap(one_contour)(jnp.arange(c_budget))
+    cs = ClusterSet(
+        contours=contours,
+        counts=jnp.where(valid, counts, 0),
+        sizes=sizes,
+        valid=valid,
+        overflow=n_clusters > c_budget,
+    )
+    return dense, cs
+
+
+# ---------------------------------------------------------------------------
+# Phase 2 — pairwise ClusterSet merge (the aggregation kernel)
+# ---------------------------------------------------------------------------
+
+
+def _components(overlap: jax.Array, valid: jax.Array) -> jax.Array:
+    """Min-label connected components over a small (2C, 2C) graph."""
+    m = overlap.shape[0]
+    idx = jnp.arange(m, dtype=jnp.int32)
+    labels = jnp.where(valid, idx, SENTINEL).astype(jnp.int32)
+
+    def cond(state):
+        labels, changed = state
+        return changed
+
+    def body(state):
+        labels, _ = state
+        neigh = jnp.where(overlap, labels[None, :], SENTINEL)
+        new = jnp.minimum(labels, jnp.min(neigh, axis=1))
+        new = jnp.where(valid, new, SENTINEL)
+        return new, jnp.any(new != labels)
+
+    labels, _ = jax.lax.while_loop(cond, body, (labels, jnp.asarray(True)))
+    return labels
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def merge_pair(
+    a: ClusterSet, b: ClusterSet, cfg: DDCConfig
+) -> Tuple[ClusterSet, jax.Array, jax.Array]:
+    """Merge two ClusterSets (the paper's polygon-overlay step).
+
+    Overlap predicate: contours within ``merge_radius`` (grid-aligned
+    proximity — the TPU-friendly stand-in for exact polygon intersection,
+    see DESIGN.md §3; the host oracle uses the exact test).  Returns
+    (merged, map_a, map_b): old-slot → new-slot (or -1) mappings so each
+    side can relabel points locally.  Deterministic and symmetric:
+    merge_pair(a, b) and the (b, a) maps agree through composition.
+    """
+    c, v = cfg.max_clusters, cfg.max_verts
+    m = 2 * c
+    contours = jnp.concatenate([a.contours, b.contours])       # (2C, V, 2)
+    counts = jnp.concatenate([a.counts, b.counts])
+    sizes = jnp.concatenate([a.sizes, b.sizes])
+    valid = jnp.concatenate([a.valid, b.valid])
+
+    # Pairwise min contour distance, memory-bounded: one row of clusters at
+    # a time against all contour vertices (avoids a (2C,2C,V,V) blow-up).
+    vert_valid_pre = (jnp.arange(v)[None, :] < counts[:, None]) & valid[:, None]
+    flat_all = contours.reshape(m * v, 2)
+    flat_valid_all = vert_valid_pre.reshape(m * v)
+
+    def row_min(i):
+        d2 = jnp.sum(
+            (contours[i][:, None, :] - flat_all[None, :, :]) ** 2, axis=-1
+        )  # (V, 2C*V)
+        vi = (jnp.arange(v) < counts[i]) & valid[i]
+        d2 = jnp.where(vi[:, None] & flat_valid_all[None, :], d2, geometry.BIG)
+        return jnp.min(d2.reshape(v, m, v), axis=(0, 2))  # (2C,)
+
+    pair_d2 = jax.lax.map(row_min, jnp.arange(m))
+    r = cfg.merge_radius
+    overlap = (pair_d2 <= r * r) & valid[:, None] & valid[None, :]
+    overlap = overlap | (jnp.eye(m, dtype=bool) & valid[:, None])
+
+    comp = _components(overlap, valid)                         # (2C,)
+    roots = valid & (comp == jnp.arange(m, dtype=jnp.int32))
+    comp_safe = jnp.clip(comp, 0, m - 1)
+    comp_size = jnp.zeros((m,), jnp.int32).at[comp_safe].add(
+        jnp.where(valid, sizes, 0)
+    )
+
+    # Rank component roots by size (desc); keep top C.
+    rank_key = jnp.where(roots, comp_size, -1)
+    order = jnp.argsort(-rank_key)                             # (2C,) root idx by size
+    new_slot_of_root = jnp.full((m,), -1, jnp.int32)
+    kept = jnp.arange(m) < c
+    new_slot_of_root = new_slot_of_root.at[order].set(
+        jnp.where(kept & (rank_key[order] > 0), jnp.arange(m, dtype=jnp.int32), -1)
+    )
+    slot_of_old = jnp.where(valid, new_slot_of_root[comp_safe], -1)  # (2C,)
+    map_a, map_b = slot_of_old[:c], slot_of_old[c:]
+
+    n_components = jnp.sum(roots.astype(jnp.int32))
+    overflow = a.overflow | b.overflow | (n_components > c)
+
+    # Build merged contours per new slot.
+    flat_pts = contours.reshape(m * v, 2)
+    vert_valid = (
+        jnp.arange(v)[None, :] < counts[:, None]
+    ) & valid[:, None]                                          # (2C, V)
+
+    def build(slot):
+        member = slot_of_old == slot                            # (2C,)
+        pmask = (vert_valid & member[:, None]).reshape(m * v)
+        if cfg.merge_refine == "grid":
+            pts, cnt = geometry.extract_contour(
+                flat_pts, pmask, cfg.bounds, cfg.grid, v
+            )
+        else:
+            pts, cnt = geometry.farthest_point_subsample(flat_pts, pmask, v)
+        size = jnp.sum(jnp.where(member, sizes, 0))
+        return pts, cnt, size, size > 0
+
+    nc, ncnt, nsize, nvalid = jax.vmap(build)(jnp.arange(c))
+    merged = ClusterSet(
+        contours=nc,
+        counts=jnp.where(nvalid, ncnt, 0),
+        sizes=nsize,
+        valid=nvalid,
+        overflow=overflow,
+    )
+    return merged, map_a, map_b
+
+
+# ---------------------------------------------------------------------------
+# Phase 2 schedules (shard_map collectives)
+# ---------------------------------------------------------------------------
+
+
+def merge_sync(cs: ClusterSet, cfg: DDCConfig, axis: str):
+    """Barrier schedule: all-gather every shard's ClusterSet, fold locally.
+
+    Matches the paper's synchronous model.  Returns (global ClusterSet,
+    local-slot → global-slot map (C,)).
+    """
+    k = jax.lax.axis_size(axis)
+    me = jax.lax.axis_index(axis)
+    gathered = jax.lax.all_gather(cs, axis)   # pytree: leaves (K, ...)
+
+    def fold(i, state):
+        acc, my_map, merged_mine = state
+        nxt = jax.tree.map(lambda x: x[i], gathered)
+        new_acc, map_a, map_b = merge_pair(acc, nxt, cfg)
+        # If shard i is me, my slots enter via map_b; else compose via map_a.
+        my_map = jnp.where(
+            i == me,
+            map_b,
+            jnp.where(my_map >= 0, map_a[jnp.clip(my_map, 0)], -1),
+        )
+        return new_acc, my_map, merged_mine | (i == me)
+
+    init = (
+        jax.tree.map(lambda x: x[0], gathered),
+        jnp.where(
+            me == 0,
+            jnp.arange(cfg.max_clusters, dtype=jnp.int32),
+            jnp.full((cfg.max_clusters,), -1, jnp.int32),
+        ),
+        me == 0,
+    )
+    acc, my_map, _ = jax.lax.fori_loop(1, k, fold, init)
+    my_map = jnp.where(cs.valid, my_map, -1)
+    return acc, my_map
+
+
+def merge_async(cs: ClusterSet, cfg: DDCConfig, axis: str):
+    """Butterfly (recursive-doubling) schedule: log2(K) ppermute+merge
+    rounds; merge compute overlaps the next round's permute.  Matches the
+    paper's asynchronous model (merge as soon as the partner is ready).
+    """
+    k = jax.lax.axis_size(axis)
+    assert k & (k - 1) == 0, f"async schedule needs power-of-two shards, got {k}"
+    me = jax.lax.axis_index(axis)
+    my_map = jnp.arange(cfg.max_clusters, dtype=jnp.int32)
+    my_map = jnp.where(cs.valid, my_map, -1)
+
+    acc = cs
+    rounds = k.bit_length() - 1
+    for level in range(rounds):
+        stride = 1 << level
+        perm = [(i, i ^ stride) for i in range(k)]
+        partner_cs = jax.tree.map(
+            lambda x: jax.lax.ppermute(x, axis, perm), acc
+        )
+        low = (me & stride) == 0
+        a = jax.tree.map(lambda s, p: jnp.where(low, s, p), acc, partner_cs)
+        b = jax.tree.map(lambda s, p: jnp.where(low, p, s), acc, partner_cs)
+        # `a`/`b` ordering is lane-consistent, so both sides compute the
+        # identical merged buffer (deterministic merge).
+        acc, map_a, map_b = merge_pair(a, b, cfg)
+        mine = jnp.where(low, map_a, map_b)
+        my_map = jnp.where(my_map >= 0, mine[jnp.clip(my_map, 0)], -1)
+    return acc, my_map
+
+
+def merge_tree(cs: ClusterSet, cfg: DDCConfig, axis: str):
+    """The paper's Algorithm 2, literally: nodes join groups of D, elect
+    the lowest-index member as leader, members SEND their contours to the
+    leader (ppermute), the leader merges; repeat up the tree until the
+    root holds the global clusters, then broadcast down.
+
+    Wire cost per level: each member sends one ClusterSet to its leader
+    ((D-1)/D of lanes send), + one broadcast at the end — between sync's
+    (K-1)·B all-gather and async's log2(K)·B butterfly.  Unlike the
+    butterfly, non-leaders idle above their level (the paper's Fig. 1).
+    """
+    k = jax.lax.axis_size(axis)
+    d = cfg.tree_degree
+    me = jax.lax.axis_index(axis)
+    my_map = jnp.where(cs.valid, jnp.arange(cfg.max_clusters, dtype=jnp.int32), -1)
+
+    acc = cs
+    stride = 1
+    while stride < k:
+        # Group = lanes {base, base+stride, ..., base+(D-1)*stride};
+        # leader = base.  Members send to the leader one by one; the
+        # leader folds each arrival (the paper's Recv loop).
+        for j in range(1, d):
+            src_off = j * stride
+            if src_off >= k:
+                break
+            perm = [(i, i - src_off) for i in range(k) if i - src_off >= 0
+                    and (i // stride) % d == j and (i - src_off) // (stride * d) == i // (stride * d)]
+            moved = jax.tree.map(lambda x: jax.lax.ppermute(x, axis, perm), acc)
+            is_leader = (me // stride) % d == 0
+            merged, map_a, map_b = merge_pair(acc, moved, cfg)
+            # Leaders fold; everyone else keeps their acc (their map will
+            # be resolved by the broadcast below).
+            acc = jax.tree.map(
+                lambda m, a: jnp.where(is_leader, m, a), merged, acc)
+            my_map = jnp.where(is_leader & (my_map >= 0),
+                               map_a[jnp.clip(my_map, 0)], my_map)
+        stride *= d
+
+    # Root (lane 0) broadcasts the global ClusterSet down the same tree
+    # (one ppermute per (level, member) hop — ppermute sources must be
+    # unique, so a flat one-to-all broadcast is not expressible).
+    gcs = acc
+    strides = []
+    s = 1
+    while s < k:
+        strides.append(s)
+        s *= d
+    for stride in reversed(strides):      # top of the tree first
+        for j in range(1, d):
+            if j * stride >= k:
+                continue
+            perm = [(b, b + j * stride) for b in range(0, k, stride * d)
+                    if b + j * stride < k]
+            moved = jax.tree.map(lambda x: jax.lax.ppermute(x, axis, perm), gcs)
+            is_receiver = (me % (stride * d)) == j * stride
+            gcs = jax.tree.map(
+                lambda g, mv: jnp.where(is_receiver, mv, g), gcs, moved)
+    # Non-root lanes resolve their local slots against the global set by
+    # contour proximity (their intermediate maps stopped at their last
+    # leader level).
+    resolved = match_to_global(cs, gcs, cfg)
+    my_map = jnp.where(me == 0, my_map, resolved)
+    return gcs, my_map
+
+
+def match_to_global(cs: ClusterSet, gcs: ClusterSet, cfg: DDCConfig) -> jax.Array:
+    """Map each local cluster to the nearest global cluster (by min
+    contour distance, within merge_radius).  Returns (C,) slot ids/-1."""
+    c, v = cfg.max_clusters, cfg.max_verts
+    gvalid_pts = (
+        (jnp.arange(v)[None, :] < gcs.counts[:, None]) & gcs.valid[:, None]
+    ).reshape(c * v)
+    gflat = gcs.contours.reshape(c * v, 2)
+
+    def one(i):
+        d2 = jnp.sum((cs.contours[i][:, None, :] - gflat[None, :, :]) ** 2, -1)
+        vi = (jnp.arange(v) < cs.counts[i]) & cs.valid[i]
+        d2 = jnp.where(vi[:, None] & gvalid_pts[None, :], d2, geometry.BIG)
+        per_g = jnp.min(d2.reshape(v, c, v), axis=(0, 2))        # (C,)
+        best = jnp.argmin(per_g)
+        r = cfg.merge_radius
+        ok = cs.valid[i] & (per_g[best] <= r * r)
+        return jnp.where(ok, best, -1).astype(jnp.int32)
+
+    return jax.lax.map(one, jnp.arange(c))
+
+
+def ddc_shard(
+    points: jax.Array,
+    mask: jax.Array,
+    cfg: DDCConfig,
+    axis: str,
+    key: jax.Array | None = None,
+):
+    """Full DDC inside ``shard_map``: phase 1 locally, phase 2 across
+    ``axis``.  Returns (global labels for local points (n,),
+    global ClusterSet, local→global slot map)."""
+    dense, cs = local_phase(points, mask, cfg, key)
+    if cfg.schedule == "sync":
+        gcs, my_map = merge_sync(cs, cfg, axis)
+    elif cfg.schedule == "tree":
+        gcs, my_map = merge_tree(cs, cfg, axis)
+    else:
+        gcs, my_map = merge_async(cs, cfg, axis)
+    glabels = jnp.where(dense >= 0, my_map[jnp.clip(dense, 0)], -1)
+    return glabels, gcs, my_map
+
+
+def make_ddc_fn(mesh, axis: str, cfg: DDCConfig):
+    """Build the jit-able distributed DDC entry point over ``mesh``.
+
+    points: (N, 2) sharded along ``axis``; mask: (N,).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    @jax.jit
+    def run(points, mask):
+        fn = jax.shard_map(
+            lambda p, m: ddc_shard(p, m, cfg, axis),
+            mesh=mesh,
+            in_specs=(P(axis, None), P(axis)),
+            out_specs=(P(axis), P(), P(axis)),
+            check_vma=False,
+        )
+        return fn(points, mask)
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Host (paper-faithful) path — NumPy oracle + sequential baseline
+# ---------------------------------------------------------------------------
+
+
+def ddc_host(
+    points: np.ndarray,
+    n_partitions: int,
+    eps: float,
+    min_pts: int,
+    partition: str = "block",
+    contour: str = "hull",
+):
+    """Reference DDC on the host: dbscan_ref per partition, exact
+    polygon-overlap merge (paper's phase-2 predicate).
+
+    Returns (global labels (n,), list of merged-cluster polygons,
+    exchanged_points: how many contour vertices crossed the 'network' —
+    drives the 1–2 % exchange claim).
+    """
+    n = len(points)
+    parts = np.array_split(np.arange(n), n_partitions) if partition == "block" else [
+        np.arange(n)[i::n_partitions] for i in range(n_partitions)
+    ]
+    labels = np.full(n, -1, np.int64)
+    polys: list = []       # (part, local_cluster, polygon, member_idx)
+    exchanged = 0
+    for pi, idx in enumerate(parts):
+        if len(idx) == 0:
+            continue
+        local = dbscan_mod.dbscan_ref(points[idx], eps, min_pts)
+        for cid in sorted(set(local[local >= 0])):
+            members = idx[local == cid]
+            if contour == "hull":
+                poly = geometry.convex_hull_np(points[members])
+            else:
+                x0, y0 = points[:, 0].min(), points[:, 1].min()
+                x1, y1 = points[:, 0].max(), points[:, 1].max()
+                poly = geometry.grid_contour_np(points[members], (x0, y0, x1, y1), 128)
+            polys.append({"members": members, "poly": poly})
+            exchanged += len(poly)
+
+    # Union-find over polygons by exact overlap (dilated by eps: two
+    # clusters merge when their polygons overlap or come within eps).
+    m = len(polys)
+    parent = list(range(m))
+
+    def find(i):
+        while parent[i] != i:
+            parent[i] = parent[parent[i]]
+            i = parent[i]
+        return i
+
+    def union(i, j):
+        ri, rj = find(i), find(j)
+        if ri != rj:
+            parent[max(ri, rj)] = min(ri, rj)
+
+    for i in range(m):
+        for j in range(i + 1, m):
+            a, b = polys[i]["poly"], polys[j]["poly"]
+            # Hull contours are ordered polygons: exact overlap test.
+            # Grid contours are unordered boundary samples: proximity only
+            # (this is what preserves non-convexity — a convex hull would
+            # wrongly merge a cluster with one that surrounds it, the
+            # paper's motivating D1 case).
+            if contour == "hull":
+                hit = polygons_near(a, b, eps)
+            else:
+                d = np.sqrt(((a[:, None, :] - b[None, :, :]) ** 2).sum(-1)).min()
+                hit = bool(d <= eps * 1.5)
+            if hit:
+                union(i, j)
+
+    global_ids = {}
+    for i in range(m):
+        r = find(i)
+        gid = global_ids.setdefault(r, len(global_ids))
+        labels[polys[i]["members"]] = gid
+    return labels, polys, exchanged
+
+
+def polygons_near(a: np.ndarray, b: np.ndarray, eps: float) -> bool:
+    """Exact overlap OR min vertex-to-vertex distance <= eps (clusters
+    that touch across a partition boundary merge, matching DBSCAN)."""
+    if len(a) == 0 or len(b) == 0:
+        return False
+    if geometry.polygons_overlap_np(a, b):
+        return True
+    d = np.sqrt(((a[:, None, :] - b[None, :, :]) ** 2).sum(-1)).min()
+    return bool(d <= eps)

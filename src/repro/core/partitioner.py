@@ -1,0 +1,82 @@
+"""Data partitioning policies for DDC phase 1 — including the paper's
+capacity-aware split (Experiment IV), which doubles as the framework's
+straggler-mitigation policy: slow hosts get smaller shards so all shards
+finish phase 1 together.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+
+def split_block(n: int, k: int) -> list[np.ndarray]:
+    return np.array_split(np.arange(n), k)
+
+
+def split_random(n: int, k: int, seed: int = 0) -> list[np.ndarray]:
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    return np.array_split(perm, k)
+
+
+def split_spatial(points: np.ndarray, k: int) -> list[np.ndarray]:
+    """Morton-ish spatial split: sort by interleaved grid bits so shards
+    are spatially compact (fewer cross-shard clusters to merge)."""
+    g = 1 << 10
+    ix = np.clip((points[:, 0] * g).astype(np.int64), 0, g - 1)
+    iy = np.clip((points[:, 1] * g).astype(np.int64), 0, g - 1)
+    code = np.zeros(len(points), np.int64)
+    for b in range(10):
+        code |= ((ix >> b) & 1) << (2 * b + 1)
+        code |= ((iy >> b) & 1) << (2 * b)
+    order = np.argsort(code, kind="stable")
+    return np.array_split(order, k)
+
+
+def capacity_aware_sizes(
+    n: int, speeds: Sequence[float], complexity_exp: float = 2.0
+) -> np.ndarray:
+    """Shard sizes that equalise phase-1 time under t_i = n_i^k / s_i.
+
+    Equal time => n_i ∝ s_i^(1/k).  k=2 for DBSCAN (the paper's case).
+    """
+    s = np.asarray(speeds, np.float64) ** (1.0 / complexity_exp)
+    sizes = np.floor(n * s / s.sum()).astype(int)
+    sizes[: n - sizes.sum()] += 1
+    return sizes
+
+
+def split_capacity_aware(
+    n: int, speeds: Sequence[float], complexity_exp: float = 2.0, seed: int = 0
+) -> list[np.ndarray]:
+    sizes = capacity_aware_sizes(n, speeds, complexity_exp)
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    out, off = [], 0
+    for sz in sizes:
+        out.append(perm[off : off + sz])
+        off += sz
+    return out
+
+
+# --- Paper experiment scenarios (sizes per machine, 8 machines) -----------
+
+def scenario_sizes(which: str, n: int = 10_000, seed: int = 0,
+                   speeds: Sequence[float] | None = None) -> list[int]:
+    """Shard sizes for the paper's Experiments I–IV (section 5)."""
+    rng = np.random.default_rng(seed)
+    if which == "I":     # random chunks in [1500, 10000]; M1 gets the full set
+        sizes = [10_000, 2_500, 3_275, 5_000, 1_666, 2_000, 5_000, 1_500]
+    elif which == "II":  # one machine the whole dataset, the rest 1/8
+        sizes = [n] + [n // 8] * 7
+    elif which == "III":  # seven machines the whole dataset, one 1/8
+        sizes = [n] * 7 + [n // 8]
+    elif which == "IV":  # capacity-aware (paper Table 6 sizes)
+        if speeds is None:
+            sizes = [1_500, 1_660, 500, 1_000, 1_500, 1_400, 1_000, 1_500]
+        else:
+            sizes = capacity_aware_sizes(sum([1250] * 8), speeds).tolist()
+    else:  # pragma: no cover
+        raise ValueError(which)
+    return [int(s) for s in sizes]

@@ -1,0 +1,89 @@
+"""Synthetic spatial benchmark datasets.
+
+The paper uses two Chameleon benchmark sets (D1: 10 000 points, nested
+shapes; D2: 30 000 points, circles + linked ovals) from
+http://cs.uef.fi/sipu/datasets/ — not downloadable in this offline
+container, so we synthesise datasets with the same described structure and
+sizes (noted in DESIGN.md): shape mixes with clusters surrounded by
+other clusters, plus background noise.  All generators are deterministic
+in ``seed`` and return float32 (n, 2) in [0, 1]^2.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _ring(rng, n, cx, cy, r, width):
+    theta = rng.uniform(0, 2 * np.pi, n)
+    rad = r + rng.normal(0, width, n)
+    return np.stack([cx + rad * np.cos(theta), cy + rad * np.sin(theta)], -1)
+
+
+def _blob(rng, n, cx, cy, sx, sy=None, rot=0.0):
+    sy = sx if sy is None else sy
+    pts = rng.normal(0, 1, (n, 2)) * [sx, sy]
+    c, s = np.cos(rot), np.sin(rot)
+    pts = pts @ np.array([[c, -s], [s, c]]).T
+    return pts + [cx, cy]
+
+
+def _moon(rng, n, cx, cy, r, width, start, end):
+    theta = rng.uniform(start, end, n)
+    rad = r + rng.normal(0, width, n)
+    return np.stack([cx + rad * np.cos(theta), cy + rad * np.sin(theta)], -1)
+
+
+def make_d1(n: int = 10_000, seed: int = 0, noise_frac: float = 0.04) -> np.ndarray:
+    """D1 analogue: different shapes, some clusters surrounded by others."""
+    rng = np.random.default_rng(seed)
+    n_noise = int(n * noise_frac)
+    n_sig = n - n_noise
+    w = np.array([0.22, 0.10, 0.18, 0.14, 0.14, 0.12, 0.10])
+    counts = np.maximum((w / w.sum() * n_sig).astype(int), 1)
+    counts[0] += n_sig - counts.sum()
+    parts = [
+        _ring(rng, counts[0], 0.30, 0.65, 0.16, 0.012),       # ring ...
+        _blob(rng, counts[1], 0.30, 0.65, 0.025),             # ... surrounding a blob
+        _moon(rng, counts[2], 0.72, 0.72, 0.13, 0.012, 0.25, np.pi - 0.25),
+        _moon(rng, counts[3], 0.78, 0.56, 0.13, 0.012, np.pi + 0.25, 2 * np.pi - 0.25),
+        _blob(rng, counts[4], 0.22, 0.22, 0.07, 0.03, 0.6),   # tilted ellipse
+        _blob(rng, counts[5], 0.62, 0.22, 0.03),
+        _blob(rng, counts[6], 0.84, 0.30, 0.025),
+    ]
+    noise = rng.uniform(0, 1, (n_noise, 2))
+    pts = np.concatenate(parts + [noise])
+    return np.clip(pts, 0.0, 1.0).astype(np.float32)
+
+
+def make_d2(n: int = 30_000, seed: int = 1, noise_frac: float = 0.04) -> np.ndarray:
+    """D2 analogue: 2 small circles, 1 big circle, 2 linked ovals."""
+    rng = np.random.default_rng(seed)
+    n_noise = int(n * noise_frac)
+    n_sig = n - n_noise
+    w = np.array([0.30, 0.12, 0.12, 0.23, 0.23])
+    counts = np.maximum((w / w.sum() * n_sig).astype(int), 1)
+    counts[0] += n_sig - counts.sum()
+    big = _ring(rng, counts[0], 0.32, 0.68, 0.20, 0.02)
+    c1 = _ring(rng, counts[1], 0.75, 0.80, 0.07, 0.015)
+    c2 = _ring(rng, counts[2], 0.85, 0.55, 0.07, 0.015)
+    ov1 = _blob(rng, counts[3], 0.40, 0.25, 0.10, 0.035, 0.5)
+    ov2 = _blob(rng, counts[4], 0.58, 0.20, 0.10, 0.035, -0.5)  # linked: overlaps ov1
+    noise = rng.uniform(0, 1, (n_noise, 2))
+    pts = np.concatenate([big, c1, c2, ov1, ov2, noise])
+    return np.clip(pts, 0.0, 1.0).astype(np.float32)
+
+
+def make_blobs(
+    n: int, k: int, seed: int = 0, spread: float = 0.02, margin: float = 0.12
+) -> tuple[np.ndarray, np.ndarray]:
+    """Well-separated Gaussian blobs (used by property tests: DDC must
+    agree with sequential DBSCAN here).  Returns (points, true_labels)."""
+    rng = np.random.default_rng(seed)
+    # Centres on a jittered grid so blobs stay >= margin apart.
+    g = int(np.ceil(np.sqrt(k)))
+    cells = [(i, j) for i in range(g) for j in range(g)][:k]
+    centers = (np.array(cells) + 0.5) / g
+    centers += rng.uniform(-0.25 / g + margin / 4, 0.25 / g - margin / 4, centers.shape)
+    labels = rng.integers(0, k, n)
+    pts = centers[labels] + rng.normal(0, spread, (n, 2))
+    return np.clip(pts, 0, 1).astype(np.float32), labels.astype(np.int32)

@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: flash attention (forward) with online softmax.
+
+Tiling: grid (batch, q_heads, q_tiles, kv_tiles); the kv axis is the
+innermost (sequential on TPU) so the running max / sum / accumulator live
+in VMEM scratch across kv steps.  GQA is handled by the K/V BlockSpec
+index_map (head h reads kv-head h // rep) — repeated heads are never
+materialised in HBM.
+
+Causal masking is two-level: whole kv tiles strictly above the diagonal
+are skipped via ``pl.when`` (no MXU work), the diagonal tile applies an
+element mask.  Optional ``window`` gives local attention (used by the
+hybrid/long-context configs); far-past tiles are likewise skipped.
+
+Block sizes default to (128, 128) — MXU-aligned (multiples of 8x128
+registers / 128x128 systolic tiles).  VMEM footprint per step:
+q (bq, d) + k, v (bk, d) + acc (bq, d) + logits (bq, bk) in f32
+≈ 128*128*4 * 5 ≈ 0.3 MB for d=128 — comfortably inside ~16 MB VMEM;
+larger d scales linearly and is still fine at d=256.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEF_BQ = 128
+DEF_BK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, causal: bool, window: int | None, bq: int, bk: int,
+    kv_len: int, q_len: int,
+):
+    kv_i = pl.program_id(3)
+    q_i = pl.program_id(2)
+    # Right-aligned positions: query row r has absolute position
+    # (kv_len - q_len) + q_i*bq + r, so decode (q_len=1) attends to the
+    # whole cache.
+    q_off = (kv_len - q_len) + q_i * bq
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_scr[...] = jnp.full(m_scr.shape, NEG_INF, jnp.float32)
+        l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    first_q_pos = q_off
+    last_q_pos = q_off + bq - 1
+    kv_start = kv_i * bk
+
+    needed = jnp.asarray(True)
+    if causal:
+        needed = kv_start <= last_q_pos
+    if window is not None:
+        needed = needed & (kv_start + bk - 1 > first_q_pos - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (bq, bk)
+        qpos = q_off + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = kv_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_cur
+
+    @pl.when(kv_i == pl.num_programs(3) - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "window", "bq", "bk", "interpret"),
+)
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, scale: float | None = None, window: int | None = None,
+    bq: int = DEF_BQ, bk: int = DEF_BK, interpret: bool = False,
+) -> jax.Array:
+    """q: (b, h, sq, d); k, v: (b, hkv, skv, d) with h % hkv == 0.
+
+    sq/skv must be multiples of bq/bk (ops.py pads).  Returns (b, h, sq, d).
+    """
+    b, h, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    bq_ = min(bq, sq)
+    bk_ = min(bk, skv)
+    assert sq % bq_ == 0 and skv % bk_ == 0, (sq, skv, bq_, bk_)
+    scale_ = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale_, causal=causal, window=window,
+        bq=bq_, bk=bk_, kv_len=skv, q_len=sq,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, sq // bq_, skv // bk_),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq_, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, bk_, d), lambda b_, h_, i, j, rep=rep: (b_, h_ // rep, j, 0)),
+            pl.BlockSpec((1, 1, bk_, d), lambda b_, h_, i, j, rep=rep: (b_, h_ // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq_, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq_, 1), jnp.float32),   # running max m
+            pltpu.VMEM((bq_, 1), jnp.float32),   # running denom l
+            pltpu.VMEM((bq_, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

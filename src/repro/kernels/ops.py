@@ -1,0 +1,124 @@
+"""Public kernel entry points.
+
+Each op dispatches to the Pallas TPU kernel on TPU backends and to the
+pure-jnp reference elsewhere (this container is CPU-only; kernels are
+validated in interpret mode by tests/test_kernels.py).  Padding to tile
+multiples happens here so kernels stay shape-strict.
+
+Set ``repro.kernels.ops.FORCE`` to "pallas" / "ref" / "interpret" to
+override dispatch (tests use "interpret").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import pairwise_dist as _pd
+from . import ref
+from . import ssd_scan as _ssd
+
+FORCE: str | None = None
+
+
+def _use_pallas() -> bool:
+    if FORCE == "pallas":
+        return True
+    if FORCE in ("ref",):
+        return False
+    if FORCE == "interpret":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return FORCE == "interpret" or jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+# -- pairwise distance / neighbour counting --------------------------------
+
+def pairwise_dist_sq(x: jax.Array, y: jax.Array, *, bn: int = 512, bm: int = 512) -> jax.Array:
+    if not _use_pallas():
+        return ref.pairwise_dist_sq(x, y)
+    xp, n = _pad_to(x, 0, bn)
+    yp, m = _pad_to(y, 0, bm)
+    out = _pd.pairwise_dist_sq(xp, yp, bn=min(bn, xp.shape[0]), bm=min(bm, yp.shape[0]),
+                               interpret=_interpret())
+    return out[:n, :m]
+
+
+def neighbor_count(x: jax.Array, mask: jax.Array, eps, *, bn: int = 512, bm: int = 512) -> jax.Array:
+    if not _use_pallas():
+        return ref.neighbor_count(x, mask, eps)
+    xp, n = _pad_to(x, 0, bn)
+    mp, _ = _pad_to(mask, 0, bn)
+    out = _pd.neighbor_count(xp, mp, eps, bn=min(bn, xp.shape[0]), bm=min(bm, xp.shape[0]),
+                             interpret=_interpret())
+    return out[:n]
+
+
+def min_label_sweep(x, mask, labels, core, eps, *, bn: int = 512, bm: int = 512) -> jax.Array:
+    if not _use_pallas():
+        d2 = ref.pairwise_dist_sq(x, x)
+        ok = (d2 <= jnp.asarray(eps, jnp.float32) ** 2) & mask[None, :] & mask[:, None] & core[None, :]
+        labs = jnp.where(ok, labels[None, :], 2**30)
+        return jnp.min(labs, axis=1).astype(jnp.int32)
+    xp, n = _pad_to(x, 0, bn)
+    mp, _ = _pad_to(mask, 0, bn)
+    lp, _ = _pad_to(labels, 0, bn)
+    cp, _ = _pad_to(core, 0, bn)
+    out = _pd.min_label_sweep(xp, mp, lp, cp, eps, bn=min(bn, xp.shape[0]),
+                              bm=min(bm, xp.shape[0]), interpret=_interpret())
+    return out[:n]
+
+
+# -- attention ---------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool = True, scale=None, window=None,
+                    bq: int = 128, bk: int = 128) -> jax.Array:
+    """q: (b, h, sq, d); k, v: (b, hkv, skv, d)."""
+    if not _use_pallas() or v.shape[-1] != q.shape[-1]:
+        # (MLA trains with d_v != d_qk; the pallas kernel assumes equal dims
+        # — on TPU the MLA layer pads v, on CPU the ref handles it.)
+        if q.shape[2] * k.shape[2] > 2**21 and v.shape[-1] == q.shape[-1]:
+            # Large sequences: chunked online softmax — the CPU stand-in for
+            # the Pallas kernel.  The named scope tells the roofline analyzer
+            # (launch/hlo_cost.py) that these intermediates live in VMEM on
+            # the TPU target and must not count as HBM traffic.
+            with jax.named_scope("vmem_kernel_attn"):
+                return ref.flash_attention_chunked(
+                    q, k, v, causal=causal, scale=scale, window=window)
+        return ref.flash_attention(q, k, v, causal=causal, scale=scale, window=window)
+    qp, sq = _pad_to(q, 2, bq)
+    kp, skv = _pad_to(k, 2, bk)
+    vp, _ = _pad_to(v, 2, bk)
+    # Padding keys get masked out by causality only when padding is at the
+    # end and queries are right-aligned; pad K with +inf positions instead:
+    # simplest correct route — require multiples for the pallas path.
+    if qp.shape[2] != sq or kp.shape[2] != skv:
+        return ref.flash_attention(q, k, v, causal=causal, scale=scale, window=window)
+    return _fa.flash_attention(q, k, v, causal=causal, scale=scale, window=window,
+                               bq=bq, bk=bk, interpret=_interpret())
+
+
+# -- SSD scan ----------------------------------------------------------------
+
+def ssd_scan(x, a, b, c, *, chunk: int = 128) -> jax.Array:
+    if not _use_pallas():
+        if x.shape[1] >= 2 * chunk:
+            with jax.named_scope("vmem_kernel_ssd"):
+                return ref.ssd_scan_chunked(x, a, b, c, chunk=chunk)
+        return ref.ssd_scan(x, a, b, c)
+    if x.shape[1] % min(chunk, x.shape[1]) != 0:
+        return ref.ssd_scan(x, a, b, c)
+    return _ssd.ssd_scan(x, a, b, c, chunk=chunk, interpret=_interpret())

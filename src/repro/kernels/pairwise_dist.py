@@ -1,0 +1,173 @@
+"""Pallas TPU kernel: tiled pairwise squared distances + fused ε-neighbour
+counting — the DDC phase-1 hot-spot (DBSCAN region queries).
+
+The paper's DBSCAN does per-point region queries (pointer chasing).  The
+TPU-native formulation is a blocked matmul: for tiles X (bn, d), Y (bm, d)
+
+    D2 = |X|^2 + |Y|^2 - 2 X Y^T
+
+which runs on the MXU.  The fused variant accumulates, per row, the count
+of points within eps — never materialising the (n, m) distance matrix in
+HBM (arithmetic intensity: O(d) flops/byte on the MXU; the count output
+is n int32 instead of n*m floats, so the kernel is compute-bound).
+
+Grid layout: (n // bn, m // bm); the m axis is the innermost (sequential)
+loop so per-row counts accumulate in the output block across j-steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEF_BN = 512
+DEF_BM = 512
+
+
+def _dist_kernel(x_ref, y_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    xx = jnp.sum(x * x, axis=-1)[:, None]
+    yy = jnp.sum(y * y, axis=-1)[None, :]
+    d2 = xx + yy - 2.0 * jax.lax.dot_general(
+        x, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    o_ref[...] = jnp.maximum(d2, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bm", "interpret"))
+def pairwise_dist_sq(
+    x: jax.Array, y: jax.Array, *, bn: int = DEF_BN, bm: int = DEF_BM,
+    interpret: bool = False,
+) -> jax.Array:
+    """Tiled (n, m) squared-distance matrix.  n, m must be tile-multiples
+    (ops.py pads)."""
+    n, d = x.shape
+    m = y.shape[0]
+    bn = min(bn, n)
+    bm = min(bm, m)
+    assert n % bn == 0 and m % bm == 0, (n, m, bn, bm)
+    return pl.pallas_call(
+        _dist_kernel,
+        grid=(n // bn, m // bm),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=interpret,
+    )(x, y)
+
+
+def _count_kernel(eps_sq_ref, x_ref, y_ref, xm_ref, ym_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    xx = jnp.sum(x * x, axis=-1)[:, None]
+    yy = jnp.sum(y * y, axis=-1)[None, :]
+    d2 = xx + yy - 2.0 * jax.lax.dot_general(
+        x, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    within = (d2 <= eps_sq_ref[0]) & (xm_ref[...] > 0)[:, None] & (ym_ref[...] > 0)[None, :]
+    o_ref[...] += jnp.sum(within.astype(jnp.int32), axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bm", "interpret"))
+def neighbor_count(
+    x: jax.Array, mask: jax.Array, eps: float | jax.Array, *,
+    bn: int = DEF_BN, bm: int = DEF_BM, interpret: bool = False,
+) -> jax.Array:
+    """Fused per-point ε-neighbour count (self included), masked.
+
+    x: (n, d), mask: (n,) bool -> (n,) int32.  n must be a tile multiple.
+    """
+    n, d = x.shape
+    bn = min(bn, n)
+    bm = min(bm, n)
+    assert n % bn == 0 and n % bm == 0, (n, bn, bm)
+    eps_sq = jnp.asarray([jnp.asarray(eps, jnp.float32) ** 2])
+    mask_i = mask.astype(jnp.int32)
+    return pl.pallas_call(
+        _count_kernel,
+        grid=(n // bn, n // bm),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((bm,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(eps_sq, x, x, mask_i, mask_i)
+
+
+def _min_label_kernel(eps_sq_ref, x_ref, y_ref, xm_ref, ym_ref, lab_ref, core_ref, o_ref):
+    """One label-propagation sweep tile: o[i] = min(lab[i], min_{j in N(i), core j} lab[j])."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.full(o_ref.shape, 2**30, jnp.int32)
+
+    x = x_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    xx = jnp.sum(x * x, axis=-1)[:, None]
+    yy = jnp.sum(y * y, axis=-1)[None, :]
+    d2 = xx + yy - 2.0 * jax.lax.dot_general(
+        x, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    ok = (
+        (d2 <= eps_sq_ref[0])
+        & (xm_ref[...] > 0)[:, None]
+        & (ym_ref[...] > 0)[None, :]
+        & (core_ref[...] > 0)[None, :]
+    )
+    labs = jnp.where(ok, lab_ref[...][None, :], jnp.int32(2**30))
+    o_ref[...] = jnp.minimum(o_ref[...], jnp.min(labs, axis=1))
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bm", "interpret"))
+def min_label_sweep(
+    x: jax.Array, mask: jax.Array, labels: jax.Array, core: jax.Array,
+    eps: float | jax.Array, *, bn: int = DEF_BN, bm: int = DEF_BM,
+    interpret: bool = False,
+) -> jax.Array:
+    """One blocked sweep of DBSCAN min-label propagation (see dbscan.py).
+
+    Returns new_labels[i] = min over ε-neighbours j (core only) of labels[j],
+    (2**30 where none).  Fused distance+min so the adjacency matrix never
+    hits HBM.
+    """
+    n, d = x.shape
+    bn = min(bn, n)
+    bm = min(bm, n)
+    assert n % bn == 0 and n % bm == 0
+    eps_sq = jnp.asarray([jnp.asarray(eps, jnp.float32) ** 2])
+    out = pl.pallas_call(
+        _min_label_kernel,
+        grid=(n // bn, n // bm),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((bm,), lambda i, j: (j,)),
+            pl.BlockSpec((bm,), lambda i, j: (j,)),
+            pl.BlockSpec((bm,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(eps_sq, x, x, mask.astype(jnp.int32), mask.astype(jnp.int32),
+      labels.astype(jnp.int32), core.astype(jnp.int32))
+    return out

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: Mamba-2 SSD (state-space duality) chunked scan.
+
+The SSD recurrence  S_t = exp(a_t) S_{t-1} + b_t^T x_t,  y_t = c_t S_t
+is O(L) sequential.  The duality rewrites a chunk of length Lc as:
+
+  intra-chunk:  y_i += sum_{j<=i} exp(cum_i - cum_j) (c_i . b_j) x_j
+                = (causal-masked (C B^T) * decay) @ X          -- MXU matmul
+  inter-chunk:  y_i += exp(cum_i) * (c_i @ S_prev)
+  state update: S   = exp(cum_last) S_prev
+                      + sum_j exp(cum_last - cum_j) b_j^T x_j  -- MXU matmul
+
+(cum = inclusive cumsum of log-decay within the chunk.)  The kernel walks
+chunks sequentially (innermost grid axis) carrying S in VMEM scratch, so
+the O(L) dependency chain touches only the (ds, dh) state while all the
+O(L^2 / chunks) work runs on the MXU — this is the TPU-native adaptation
+of Mamba-2's GPU algorithm (DESIGN.md §3).
+
+Grid: (batch, heads, n_chunks).  Block = one (chunk, head) slice.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEF_CHUNK = 128
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, o_ref, s_scr, *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros(s_scr.shape, jnp.float32)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)      # (Lc, dh)
+    a = a_ref[0, :, 0].astype(jnp.float32)         # (Lc,)
+    b = b_ref[0, :, 0, :].astype(jnp.float32)      # (Lc, ds)
+    c = c_ref[0, :, 0, :].astype(jnp.float32)      # (Lc, ds)
+
+    cum = jnp.cumsum(a)                            # inclusive
+    # Intra-chunk: M[i, j] = exp(cum_i - cum_j) for j <= i else 0.
+    li = cum[:, None]
+    lj = cum[None, :]
+    causal = (
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    )
+    decay = jnp.where(causal, jnp.exp(li - lj), 0.0)
+    cb = jax.lax.dot_general(
+        c, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Lc, Lc)
+    y = jax.lax.dot_general(
+        cb * decay, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (Lc, dh)
+
+    # Inter-chunk: contribution of carried state.
+    s_prev = s_scr[...]                            # (ds, dh)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        c, s_prev, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # State update for the next chunk.
+    last = cum[-1]
+    w = jnp.exp(last - cum)[:, None] * b           # (Lc, ds)
+    s_scr[...] = jnp.exp(last) * s_prev + jax.lax.dot_general(
+        w, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    o_ref[0, :, 0, :] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array, *,
+    chunk: int = DEF_CHUNK, interpret: bool = False,
+) -> jax.Array:
+    """x: (bsz, l, h, dh); a: (bsz, l, h); b, c: (bsz, l, h, ds).
+
+    l must be a multiple of ``chunk`` (ops.py pads).  Matches ref.ssd_scan.
+    """
+    bsz, l, h, dh = x.shape
+    ds = b.shape[-1]
+    chunk_ = min(chunk, l)
+    assert l % chunk_ == 0, (l, chunk_)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk_)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz, h, l // chunk_),
+        in_specs=[
+            pl.BlockSpec((1, chunk_, 1, dh), lambda b_, h_, i: (b_, i, h_, 0)),
+            pl.BlockSpec((1, chunk_, 1), lambda b_, h_, i: (b_, i, h_)),
+            pl.BlockSpec((1, chunk_, 1, ds), lambda b_, h_, i: (b_, i, h_, 0)),
+            pl.BlockSpec((1, chunk_, 1, ds), lambda b_, h_, i: (b_, i, h_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk_, 1, dh), lambda b_, h_, i: (b_, i, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((ds, dh), jnp.float32)],
+        interpret=interpret,
+    )(x, a, b, c)

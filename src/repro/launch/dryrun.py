@@ -1,0 +1,259 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede any jax-importing import: jax locks the device count on
+# first backend init.  512 host devices model the 2-pod production mesh.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (GSPMD partitions the step),
+  * per-device memory fits (memory_analysis),
+  * and extracts the roofline terms (hlo_cost + cost_analysis).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all --single-pod-only
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.shapes import SHAPES, ShapeConfig, applicable
+from repro.launch import hlo_cost, mesh as mesh_mod, roofline
+from repro.models import transformer as T
+from repro.parallel import api as par
+from repro.parallel import sharding as shard_rules
+from repro.serve import engine
+from repro.train import optimizer as opt_mod
+from repro.train import step as step_mod
+
+# Per-arch training recipe: the 100B+ param configs use Adafactor+bf16
+# (Adam state would exceed pod HBM — EXPERIMENTS.md §Dry-run).
+BIG_ARCHS = {"kimi-k2-1t-a32b", "jamba-1.5-large-398b", "llama4-scout-17b-a16e"}
+
+
+def train_recipe(arch: str, microbatches: int = 8) -> step_mod.TrainConfig:
+    """Per-arch training recipe.  8 gradient-accumulation microbatches keep
+    train_4k activations inside v5e HBM (EXPERIMENTS.md §Dry-run)."""
+    if arch in BIG_ARCHS:
+        return step_mod.TrainConfig(
+            opt=opt_mod.OptConfig(name="adafactor", stochastic_rounding=True),
+            param_dtype="bfloat16", microbatches=microbatches,
+        )
+    return step_mod.TrainConfig(
+        opt=opt_mod.OptConfig(name="adamw"), param_dtype="bfloat16",
+        microbatches=microbatches,
+    )
+
+
+def shape_cell_cfg(cfg, shape: ShapeConfig):
+    """Arch tweaks for a given cell (long-context window for hybrids)."""
+    window = "cfg"
+    if shape.name == "long_500k" and cfg.long_window is not None:
+        window = cfg.long_window
+    return window
+
+
+def batch_specs(cfg, shape: ShapeConfig, global_batch: int, seq: int):
+    b = {"tokens": jax.ShapeDtypeStruct((global_batch, seq), jnp.int32)}
+    if cfg.frontend == "audio_stub":
+        b["frames"] = jax.ShapeDtypeStruct(
+            (global_batch, cfg.frontend_seq, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.prefix_len:
+        b["prefix"] = jax.ShapeDtypeStruct(
+            (global_batch, cfg.prefix_len, cfg.d_model), jnp.bfloat16
+        )
+    return b
+
+
+def model_flops(cfg, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill) / per-token (decode),
+    N = active params, + causal attention term."""
+    pc = cfg.param_counts()
+    n_active = pc["active"]
+    b, s = shape.global_batch, shape.seq_len
+    n_attn = sum(1 for k, _ in cfg.layer_kinds() if k == "attn") * cfg.n_groups
+    n_attn += cfg.encoder_layers
+    hd, h = cfg.head_dim, cfg.n_heads
+    if shape.kind == "train":
+        tokens = b * s
+        attn = n_attn * 2.0 * b * h * s * s * hd / 2 * 3  # fwd+bwd(2x)
+        return 6.0 * n_active * tokens + attn
+    if shape.kind == "prefill":
+        tokens = b * s
+        attn = n_attn * 2.0 * b * h * s * s * hd / 2
+        return 2.0 * n_active * tokens + attn
+    # decode: one token against a seq_len cache
+    attn = n_attn * 4.0 * b * h * min(s, 10**9 if cfg.window is None else cfg.window) * hd
+    return 2.0 * n_active * b + attn
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               pctx_overrides: dict | None = None,
+               tcfg: step_mod.TrainConfig | None = None,
+               capacity_factor: float | None = None) -> dict:
+    cfg = configs.get_config(arch)
+    if capacity_factor is not None:
+        cfg = dataclasses.replace(cfg, capacity_factor=capacity_factor)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+    }
+    if not ok:
+        return dict(rec, status="skipped", reason=why)
+
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    overrides = dict(fsdp=True, remat="full")
+    overrides.update(pctx_overrides or {})
+    pctx = par.ParallelCtx(mesh=mesh, **overrides)
+    window = shape_cell_cfg(cfg, shape)
+
+    t0 = time.time()
+    try:
+        if shape.kind == "train":
+            tcfg = tcfg or train_recipe(arch)
+            step_fn = step_mod.build_train_step(cfg, tcfg, pctx)
+            with par.use(pctx):
+                state_sds = jax.eval_shape(
+                    lambda: step_mod.make_train_state(cfg, tcfg)
+                )
+            state_sh = shard_rules.param_shardings(state_sds, pctx)
+            batch_sds = batch_specs(cfg, shape, shape.global_batch, shape.seq_len)
+            batch_sh = step_mod.batch_shardings(batch_sds, pctx)
+            jf = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                         donate_argnums=(0,))
+            lowered = jf.lower(state_sds, batch_sds)
+        elif shape.kind == "prefill":
+            scfg = engine.ServeConfig(max_len=shape.seq_len, window=window)
+            params_sds = jax.eval_shape(
+                lambda: T.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.bfloat16)
+            )
+            params_sh = shard_rules.param_shardings(params_sds, pctx)
+            batch_sds = batch_specs(cfg, shape, shape.global_batch, shape.seq_len)
+            batch_sh = step_mod.batch_shardings(batch_sds, pctx)
+            fn = engine.build_prefill(cfg, scfg, pctx)
+            jf = jax.jit(
+                lambda p, b: fn(p, b["tokens"], b.get("prefix"), b.get("frames")),
+                in_shardings=(params_sh, batch_sh),
+            )
+            lowered = jf.lower(params_sds, batch_sds)
+        else:  # decode
+            scfg = engine.ServeConfig(max_len=shape.seq_len, window=window)
+            params_sds = jax.eval_shape(
+                lambda: T.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.bfloat16)
+            )
+            params_sh = shard_rules.param_shardings(params_sds, pctx)
+            with par.use(pctx):
+                cache_sds = jax.eval_shape(
+                    lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                         dtype=jnp.bfloat16, window=window)
+                )
+            cache_sh = shard_rules.cache_shardings(cfg, cache_sds, pctx)
+            tok_sds = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+            tok_sh = step_mod.batch_shardings(tok_sds, pctx)
+            pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+            fn = engine.build_decode(cfg, scfg, pctx)
+            jf = jax.jit(fn, in_shardings=(params_sh, tok_sh, cache_sh, None),
+                         donate_argnums=(2,))
+            lowered = jf.lower(params_sds, tok_sds, cache_sds, pos_sds)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        hlo = compiled.as_text()
+        my = hlo_cost.analyze_text(hlo)
+        mf = model_flops(cfg, shape)
+        r = roofline.Roofline(
+            flops=my["flops"], bytes_accessed=my["bytes"],
+            coll_bytes=my["collective_bytes"], chips=chips, model_flops=mf,
+            coll_detail={k: v for k, v in my["collectives"].items()},
+        ).finalize()
+        xla_cost = compiled.cost_analysis()
+        if isinstance(xla_cost, list):
+            xla_cost = xla_cost[0]
+        mem = roofline.memory_summary(compiled)
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            hbm_per_device_gb=round(mem["total_hbm_bytes"] / 2**30, 3),
+            memory=mem,
+            flops_per_dev=my["flops"], bytes_per_dev=my["bytes"],
+            coll_bytes_per_dev=my["collective_bytes"],
+            coll_detail=my["collectives"], coll_counts=my["collective_counts"],
+            xla_flops=float(xla_cost.get("flops", -1.0)),
+            t_compute=r.t_compute, t_memory=r.t_memory,
+            t_collective=r.t_collective, bottleneck=r.bottleneck,
+            model_flops=mf, useful_ratio=round(r.useful_ratio, 4),
+            roofline_frac=round(
+                max(r.useful_ratio, 0.0)
+                * (r.t_compute / max(max(r.t_compute, r.t_memory, r.t_collective), 1e-30)),
+                4,
+            ),
+        )
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--fsdp", type=int, default=1)
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--moe-impl", default="epsum")
+    ap.add_argument("--a2a-int8", action="store_true")
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = configs.all_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = []
+    if not args.multi_pod_only:
+        meshes.append(False)
+    if not args.single_pod_only:
+        meshes.append(True)
+
+    overrides = dict(fsdp=bool(args.fsdp), remat=args.remat,
+                     moe_impl=args.moe_impl, a2a_int8=args.a2a_int8)
+    records = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = lower_cell(arch, shape, mp, pctx_overrides=overrides,
+                                 capacity_factor=args.capacity_factor)
+                short = {k: rec.get(k) for k in (
+                    "arch", "shape", "mesh", "status", "hbm_per_device_gb",
+                    "t_compute", "t_memory", "t_collective", "bottleneck",
+                    "useful_ratio", "compile_s", "reason", "error")}
+                print(json.dumps(short), flush=True)
+                records.append(rec)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out + ".json", "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"wrote {args.out}.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,366 @@
+"""While-loop-aware cost analysis of optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts every instruction ONCE — a
+``lax.scan`` over 62 layers reports one layer's FLOPs (verified
+empirically; see tests/test_roofline.py).  Since the whole model stack
+scans over layer groups, dry-run rooflines would be off by ~n_layers.
+This module re-derives costs from ``compiled.as_text()`` with loop trip
+counts applied:
+
+* computations are parsed into instruction tables;
+* a call graph is built from ``calls=`` (fusions/calls) and
+  ``condition=/body=`` (whiles); while bodies get weight x trip-count,
+  where the trip count is recovered from the loop-bound constant in the
+  condition computation (exact for lax.scan; an upper bound for dynamic
+  ``while_loop``s);
+* FLOPs: 2 * prod(result dims) * prod(contracting dims) per ``dot``
+  (elementwise flops are negligible for these models and ignored);
+* HBM bytes: per *top-level* instruction, operand bytes + result bytes —
+  post-fusion, each top-level value is one HBM write plus reads by its
+  consumers; fusion-internal instructions don't touch HBM and are
+  excluded.  dynamic-slice/gather read only their result-sized window;
+  dynamic-update-slice touches 2x its update operand;
+* collective bytes: result bytes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute (+ ``-start``
+  variants), trip-weighted, per kind.
+
+All numbers are per-device (XLA emits the partitioned module).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SKIP_RESULT = {
+    "parameter", "constant", "iota", "get-tuple-element", "tuple", "bitcast",
+    "while", "call", "conditional", "after-all", "partition-id", "replica-id",
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _split_instr(rhs: str):
+    """Split '<type> <op>(<rest>' — type may be a tuple with nested parens
+    and /*index=N*/ comments."""
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    type_str = rhs[: i + 1]
+                    rest = rhs[i + 1 :].strip()
+                    break
+        else:
+            return None
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        type_str, rest = rhs[:sp], rhs[sp + 1 :].strip()
+    m = re.match(r"([\w\-]+)\((.*)$", rest)
+    if not m:
+        return None
+    return type_str, m.group(1), m.group(2)
+
+
+def _shape_dims(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str
+    operands: list
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    is_fusion_target: bool = False
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Computation | None = None
+    fusion_targets: set[str] = set()
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m:
+                cur = Computation(m.group(1), [])
+            continue
+        if line.strip() == "}" or line.rstrip().endswith("} // " + cur.name):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _ASSIGN_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        parsed = _split_instr(rhs)
+        if parsed is None:
+            continue
+        type_str, op, rest = parsed
+        # operands: %names appearing before any attr like calls=/to_apply=
+        arg_part = rest.split("), ")[0]
+        operands = _OPERAND_RE.findall(arg_part)
+        cur.instrs.append(Instr(name, type_str, op, rest, operands))
+        for attr in ("calls=", ):
+            for t in re.findall(r"calls=%?([\w.\-]+)", rest):
+                fusion_targets.add(t)
+    if cur is not None:
+        comps[cur.name] = cur
+    for t in fusion_targets:
+        if t in comps:
+            comps[t].is_fusion_target = True
+    return comps
+
+
+def _trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    """Loop bound heuristic: the max integer constant in the condition."""
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = 1
+    for ins in cond.instrs:
+        for m in re.finditer(r"constant\((\d+)\)", ins.rest):
+            best = max(best, int(m.group(1)))
+        for m in re.finditer(r"constant\((\d+)\)", ins.type_str):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _weights(comps: Dict[str, Computation]) -> Dict[str, float]:
+    """Execution weight per computation (entry=1; while bodies x trips)."""
+    entry = None
+    called: set[str] = set()
+    edges: Dict[str, list[tuple[str, float]]] = defaultdict(list)
+    for c in comps.values():
+        for ins in c.instrs:
+            if ins.op == "while":
+                m = re.search(r"condition=%?([\w.\-]+), body=%?([\w.\-]+)", ins.rest)
+                if not m:
+                    m = re.search(r"body=%?([\w.\-]+), condition=%?([\w.\-]+)", ins.rest)
+                    cond, body = (m.group(2), m.group(1)) if m else (None, None)
+                else:
+                    cond, body = m.group(1), m.group(2)
+                if body:
+                    # XLA records exact trip counts when it can prove them.
+                    kt = re.search(r'known_trip_count[^0-9]*(\d+)', ins.rest)
+                    trips = int(kt.group(1)) if kt else _trip_count(comps, cond)
+                    edges[c.name].append((body, float(trips)))
+                    edges[c.name].append((cond, float(trips) + 1))
+                    called.add(body)
+                    called.add(cond)
+            else:
+                for t in re.findall(r"(?:calls|to_apply|branch_computations)=\{?%?([\w.\-,%\s]+)\}?", ins.rest):
+                    for tn in re.findall(r"[\w.\-]+", t):
+                        if tn in comps:
+                            edges[c.name].append((tn, 1.0))
+                            called.add(tn)
+    roots = [n for n in comps if n not in called]
+    weights: Dict[str, float] = defaultdict(float)
+
+    def visit(name: str, w: float, depth=0):
+        if depth > 50:
+            return
+        weights[name] += w
+        for child, mult in edges.get(name, []):
+            visit(child, w * mult, depth + 1)
+
+    for r in roots:
+        visit(r, 1.0)
+    return weights
+
+
+def _fusion_input_bytes(comp: Computation, operand_types: list[str]) -> float:
+    """Effective HBM reads of a fusion: a parameter consumed only through
+    dynamic-slice/gather reads just the slices, not the whole array
+    (stacked-layer params in scan bodies would otherwise overcount by the
+    full stack size per iteration)."""
+    # param index -> instr name
+    params: dict[str, int] = {}
+    for ins in comp.instrs:
+        if ins.op == "parameter":
+            m = re.match(r"(\d+)", ins.rest)
+            if m:
+                params[ins.name] = int(m.group(1))
+    total = 0.0
+    for ins in comp.instrs:
+        if ins.op != "parameter":
+            continue
+        idx = params.get(ins.name, None)
+        full = _shape_bytes(
+            operand_types[idx] if idx is not None and idx < len(operand_types)
+            else ins.type_str
+        )
+        users = [u for u in comp.instrs if ins.name in u.operands]
+        if users:
+            sliced = 0.0
+            all_slicing = True
+            for u in users:
+                if u.op in ("dynamic-slice", "gather"):
+                    sliced += _shape_bytes(u.type_str)
+                elif u.op in ("dynamic-update-slice",):
+                    # reads only the update-sized window it overwrites
+                    upd = u.operands[1] if len(u.operands) > 1 else None
+                    sliced += _shape_bytes(
+                        next((i.type_str for i in comp.instrs if i.name == upd), "")
+                    )
+                else:
+                    all_slicing = False
+                    break
+            if all_slicing:
+                total += min(full, sliced)
+                continue
+        total += full
+    return total
+
+
+def _comp_has_scope(comps, name, cache) -> bool:
+    if name in cache:
+        return cache[name]
+    c = comps.get(name)
+    val = bool(c) and any(
+        "vmem_kernel" in i.rest for i in c.instrs if i.op != "parameter"
+    )
+    cache[name] = val
+    return val
+
+
+def analyze_text(text: str) -> dict:
+    comps = parse_module(text)
+    weights = _weights(comps)
+    scope_cache: dict = {}
+
+    # Global instruction table for operand type lookup.
+    types: Dict[str, str] = {}
+    for c in comps.values():
+        for ins in c.instrs:
+            types[ins.name] = ins.type_str
+
+    # Values produced inside a vmem_kernel scope live in VMEM: neither
+    # their write nor any read of them counts as HBM traffic.
+    scoped_names: set[str] = set()
+    for c in comps.values():
+        for ins in c.instrs:
+            if "vmem_kernel" in ins.rest:
+                scoped_names.add(ins.name)
+            elif ins.op == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", ins.rest)
+                if m and _comp_has_scope(comps, m.group(1), scope_cache):
+                    scoped_names.add(ins.name)
+
+    flops = 0.0
+    bytes_hbm = 0.0
+    coll = {k: 0.0 for k in _COLLECTIVES}
+    coll_counts = {k: 0 for k in _COLLECTIVES}
+
+    for c in comps.values():
+        w = weights.get(c.name, 0.0)
+        if w == 0.0:
+            continue
+        for ins in c.instrs:
+            # ---- FLOPs (dots, counted everywhere incl. fusion bodies) ---
+            if ins.op == "dot":
+                m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+                if m and ins.operands:
+                    lhs_type = types.get(ins.operands[0], "")
+                    dims_info = _shape_dims(lhs_type)
+                    res_info = _shape_dims(ins.type_str)
+                    if dims_info and res_info:
+                        lhs_dims = dims_info[0][1]
+                        contract = 1
+                        for i in [int(x) for x in m.group(1).split(",") if x]:
+                            if i < len(lhs_dims):
+                                contract *= lhs_dims[i]
+                        res_elems = 1
+                        for d in res_info[0][1]:
+                            res_elems *= d
+                        flops += w * 2.0 * res_elems * contract
+            if c.is_fusion_target:
+                continue  # no HBM traffic inside fusions
+            if ins.name in scoped_names:
+                # Stand-in for a Pallas kernel: these intermediates live in
+                # VMEM on the TPU target (kernels/ops.py marks the scopes);
+                # boundary tensors are still counted at producers/consumers
+                # outside the scope.
+                continue
+            # ---- collectives ------------------------------------------
+            base = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+            if base in _COLLECTIVES and not ins.op.endswith("-done"):
+                b = _shape_bytes(ins.type_str)
+                coll[base] += w * b
+                coll_counts[base] += 1
+                bytes_hbm += w * 2 * b
+                continue
+            # ---- HBM bytes --------------------------------------------
+            if ins.op in _SKIP_RESULT:
+                continue
+            if ins.op in ("dynamic-slice", "gather"):
+                bytes_hbm += w * 2 * _shape_bytes(ins.type_str)
+                continue
+            if ins.op in ("dynamic-update-slice",):
+                upd = types.get(ins.operands[1], "") if len(ins.operands) > 1 else ""
+                bytes_hbm += w * 2 * _shape_bytes(upd)
+                continue
+            out_b = _shape_bytes(ins.type_str)
+            live_ops = [o for o in ins.operands if o not in scoped_names]
+            if ins.op == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", ins.rest)
+                target = comps.get(m.group(1)) if m else None
+                if target is not None:
+                    op_types = [
+                        types.get(o, "") if o not in scoped_names else ""
+                        for o in ins.operands
+                    ]
+                    in_b = _fusion_input_bytes(target, op_types)
+                    bytes_hbm += w * (out_b + in_b)
+                    continue
+            in_b = sum(_shape_bytes(types.get(o, "")) for o in live_ops)
+            bytes_hbm += w * (out_b + in_b)
+
+    return {
+        "flops": flops,
+        "bytes": bytes_hbm,
+        "collective_bytes": sum(coll.values()),
+        "collectives": coll,
+        "collective_counts": coll_counts,
+        "n_computations": len(comps),
+    }

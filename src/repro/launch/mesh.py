@@ -1,0 +1,29 @@
+"""Production mesh builders.
+
+A function (not a module constant) so importing never touches jax device
+state.  Single pod: 256 chips as (data=16, model=16); multi-pod: 2 pods
+= 512 chips as (pod=2, data=16, model=16) — 'pod' is the outer DP axis
+(its collectives cross the inter-pod DCN/ICI links, which is what the
+multi-pod dry-run exercises).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(n: int | None = None, axis: str = "data"):
+    """Small CPU mesh over however many host devices exist (tests)."""
+    n = n or len(jax.devices())
+    return jax.make_mesh((n,), (axis,), axis_types=(AxisType.Auto,))

@@ -1,0 +1,142 @@
+"""Three-term roofline from a compiled dry-run artifact (TPU v5e target).
+
+  compute term    = HLO_FLOPs / (chips * 197e12)        [bf16 peak]
+  memory term     = HLO_bytes / (chips * 819e9)         [HBM BW]
+  collective term = collective_bytes / (chips * 50e9)   [ICI per link]
+
+``cost_analysis()`` supplies FLOPs / bytes.  Collective bytes are NOT in
+cost_analysis — we parse the optimized HLO and sum the output-shape bytes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op (weighted by how many times scan bodies execute,
+via the enclosing while-loop trip counts when derivable; XLA flattens
+SPMD collectives into the per-device module, so sums are per device).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string, incl. tuples '(bf16[2,3], f32[4])'."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output bytes per collective kind from optimized HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # result = TYPE op-name(...)
+        m = re.match(r"%?[\w.\-]+ = (\(?[\w\[\],\s]*\)?) ([\w\-]+)\(", s)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        base = op.rstrip("-start").rstrip("-done") if op.endswith(("-start", "-done")) else op
+        for kind in _COLLECTIVES:
+            if op == kind or op == kind + "-start":
+                out[kind] += _shape_bytes(type_str)
+                counts[kind] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float
+    chips: int
+    # terms (seconds)
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    bottleneck: str = ""
+    model_flops: float = 0.0
+    useful_ratio: float = 0.0
+    coll_detail: dict = dataclasses.field(default_factory=dict)
+
+    def finalize(self):
+        self.t_compute = self.flops / PEAK_FLOPS
+        self.t_memory = self.bytes_accessed / HBM_BW
+        self.t_collective = self.coll_bytes / LINK_BW
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        self.bottleneck = max(terms, key=terms.get)
+        if self.flops > 0 and self.model_flops > 0:
+            self.useful_ratio = self.model_flops / (self.flops * self.chips)
+        return self
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(compiled, hlo_text: str, chips: int, model_flops: float = 0.0) -> Roofline:
+    """Build the roofline from a compiled executable.
+
+    cost_analysis() on an SPMD-partitioned module reports *per-device*
+    flops/bytes (validated in tests/test_roofline.py), so terms need no
+    further division by chips; collective bytes parsed from the
+    per-device module likewise.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    r = Roofline(
+        flops=flops,
+        bytes_accessed=bytes_accessed,
+        coll_bytes=float(coll["total"]),
+        chips=chips,
+        model_flops=model_flops,
+        coll_detail=coll,
+    )
+    return r.finalize()
+
+
+def memory_summary(compiled) -> dict:
+    m = compiled.memory_analysis()
+    keys = (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    )
+    d = {k: getattr(m, k, 0) for k in keys}
+    d["total_hbm_bytes"] = (
+        d["argument_size_in_bytes"] + d["output_size_in_bytes"]
+        + d["temp_size_in_bytes"] - d["alias_size_in_bytes"]
+    )
+    return d

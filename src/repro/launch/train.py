@@ -1,0 +1,143 @@
+"""End-to-end training driver.
+
+Wires together: config registry → mesh → sharded train state →
+deterministic data pipeline (optionally DDC-curated) → jitted train step
+→ checkpointing (async, atomic, elastic-restorable).
+
+CPU-scale example (the examples/train_lm.py quickstart drives this):
+
+  PYTHONPATH=src python -m repro.launch.train \
+      --arch qwen3-8b --tiny --steps 50 --batch 8 --seq 128 --mesh-devices 1
+
+Production shape (lowered by the dry-run; identical code path):
+
+  python -m repro.launch.train --arch qwen3-8b --batch 256 --seq 4096 \
+      --mesh production --multi-pod
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.data import curation, pipeline
+from repro.launch import mesh as mesh_mod
+from repro.parallel import api as par
+from repro.parallel import sharding as shard_rules
+from repro.train import checkpoint as ckpt_mod
+from repro.train import optimizer as opt_mod
+from repro.train import step as step_mod
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--tiny", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--opt", default="adamw")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--mesh", default="host", choices=["host", "production"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mesh-devices", type=int, default=0)
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--curate", action="store_true",
+                    help="DDC-curated cluster-balanced sampling")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_config(args.arch)
+    if args.tiny:
+        cfg = cfg.tiny()
+
+    if args.mesh == "production":
+        mesh = mesh_mod.make_production_mesh(multi_pod=args.multi_pod)
+    else:
+        n = args.mesh_devices or len(jax.devices())
+        mesh = mesh_mod.make_host_mesh(n) if n > 1 else None
+
+    pctx = par.ParallelCtx(
+        mesh=mesh, fsdp=args.fsdp, remat=args.remat,
+        compress_grads=args.compress_grads,
+    )
+    tcfg = step_mod.TrainConfig(
+        opt=opt_mod.OptConfig(name=args.opt, lr=args.lr,
+                              decay_steps=max(args.steps, 10)),
+        microbatches=args.microbatches,
+    )
+
+    dcfg = pipeline.DataConfig(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch,
+        seed=args.seed, frontend=cfg.frontend, frontend_seq=cfg.frontend_seq,
+        prefix_len=cfg.prefix_len, d_model=cfg.d_model,
+    )
+    if args.curate:
+        emb, doc_clusters = pipeline.doc_embeddings(dcfg, n_docs=4096)
+        res = curation.curate(emb, mesh=mesh if mesh else None)
+        dcfg = curation.apply_to_data_config(dcfg, res, doc_clusters)
+        print(f"[curate] DDC found {res.n_clusters} clusters; "
+              f"exchanged {res.exchanged_fraction:.2%} of embedding bytes")
+
+    with par.use(pctx):
+        state = step_mod.make_train_state(cfg, tcfg)
+    step_fn = step_mod.build_train_step(cfg, tcfg, pctx)
+
+    if mesh is not None:
+        state_sh = shard_rules.param_shardings(state, pctx)
+        state = jax.device_put(state, state_sh)
+        jit_step = jax.jit(step_fn, in_shardings=(state_sh, None),
+                           out_shardings=(state_sh, None), donate_argnums=(0,))
+    else:
+        jit_step = jax.jit(step_fn, donate_argnums=(0,))
+
+    mgr = None
+    start_step = 0
+    if args.ckpt_dir:
+        mgr = ckpt_mod.CheckpointManager(args.ckpt_dir)
+        if args.resume and mgr.latest_step() is not None:
+            shardings = shard_rules.param_shardings(state, pctx) if mesh else None
+            state, manifest = ckpt_mod.restore(args.ckpt_dir, state,
+                                               shardings=shardings)
+            start_step = int(manifest["step"])
+            print(f"[ckpt] resumed at step {start_step}")
+
+    it = pipeline.iterate(dcfg, start_step)
+    t0 = time.time()
+    losses = []
+    for i in range(start_step, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        state, metrics = jit_step(state, batch)
+        losses.append(float(metrics["loss"]))
+        if (i + 1) % args.log_every == 0 or i == args.steps - 1:
+            dt = time.time() - t0
+            print(json.dumps({
+                "step": i + 1,
+                "loss": round(float(np.mean(losses[-args.log_every:])), 4),
+                "gnorm": round(float(metrics["gnorm"]), 3),
+                "lr": float(metrics["lr"]),
+                "steps_per_s": round((i + 1 - start_step) / dt, 3),
+            }), flush=True)
+        if mgr and (i + 1) % args.ckpt_every == 0:
+            mgr.save_async(state, i + 1)
+    if mgr:
+        mgr.save(state, args.steps)
+        print(f"[ckpt] final checkpoint at step {args.steps}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

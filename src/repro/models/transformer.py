@@ -1,0 +1,412 @@
+"""Unified transformer stack: decoder-only, enc-dec, hybrid, SSM.
+
+Layers are organised in *pattern groups*: ``cfg.block_pattern`` (e.g.
+jamba's 7×mamba + 1×attn) repeats ``cfg.n_groups`` times; parameters are
+stacked over groups and the stack is traversed with ``lax.scan`` so the
+compiled HLO contains each distinct block body once (critical for the
+512-device dry-run compile times of 62-layer models).
+
+All functions are pure; sharding enters via parallel.api constraints and
+the MoE shard_map island in layers.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.parallel import api as par
+
+Params = dict
+
+AUX_COEF = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _block_init(cfg: ModelConfig, key, kind: str, is_moe: bool, cross: bool) -> Params:
+    ks = jax.random.split(key, 6)
+    p: Params = {"norm1": L.norm_init(cfg, cfg.d_model)}
+    if kind == "attn":
+        p["mixer"] = L.attn_init(cfg, ks[0])
+    else:
+        p["mixer"] = L.mamba_init(cfg, ks[0])
+    if cross:
+        p["norm_x"] = L.norm_init(cfg, cfg.d_model)
+        p["cross"] = L.attn_init(cfg, ks[1], cross=True)
+    if cfg.d_ff > 0 or is_moe:
+        p["norm2"] = L.norm_init(cfg, cfg.d_model)
+        p["ffn"] = L.moe_init(cfg, ks[2]) if is_moe else L.mlp_init(
+            cfg, ks[2], cfg.d_model, cfg.d_ff
+        )
+    return p
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, 8)
+    v, d = cfg.padded_vocab, cfg.d_model
+    params: Params = {
+        "embed": (jax.random.normal(keys[0], (v, d)) * 0.02),
+        "final_norm": L.norm_init(cfg, d),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(keys[1], (v, d)) * 0.02)
+
+    kinds = cfg.layer_kinds()
+    cross = cfg.encoder_layers > 0
+
+    def one_group(gkey):
+        gks = jax.random.split(gkey, len(kinds))
+        return {
+            f"l{i}": _block_init(cfg, gks[i], kind, is_moe, cross)
+            for i, (kind, is_moe) in enumerate(kinds)
+        }
+
+    gkeys = jax.random.split(keys[2], cfg.n_groups)
+    params["blocks"] = jax.vmap(one_group)(gkeys)
+
+    if cfg.encoder_layers:
+        def enc_group(gkey):
+            gks = jax.random.split(gkey, 2)
+            return {
+                "norm1": L.norm_init(cfg, d),
+                "mixer": L.attn_init(cfg, gks[0]),
+                "norm2": L.norm_init(cfg, d),
+                "ffn": L.mlp_init(cfg, gks[1], d, cfg.d_ff),
+            }
+        ekeys = jax.random.split(keys[3], cfg.encoder_layers)
+        params["encoder"] = jax.vmap(enc_group)(ekeys)
+        params["enc_final_norm"] = L.norm_init(cfg, d)
+
+    return jax.tree.map(lambda x: x.astype(dtype) if x.dtype == jnp.float32 else x,
+                        params)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _block_apply(cfg, kind, is_moe, bp, x, positions, window, enc_out=None):
+    """One block, full-sequence.  Returns (x, aux)."""
+    h = L.norm_apply(cfg, bp["norm1"], x)
+    if kind == "attn":
+        if cfg.attn_kind == "mla":
+            o, _ = L.mla_apply(cfg, bp["mixer"], h, positions=positions,
+                               window=window)
+        else:
+            o, _ = L.attn_apply(cfg, bp["mixer"], h, positions=positions,
+                                window=window)
+    else:
+        o, _ = L.mamba_apply(cfg, bp["mixer"], h)
+    x = x + o
+    if enc_out is not None and "cross" in bp:
+        hx = L.norm_apply(cfg, bp["norm_x"], x)
+        kv = L.cross_kv(cfg, bp["cross"], enc_out)
+        x = x + L.cross_apply(cfg, bp["cross"], hx, kv)
+    aux = jnp.zeros((), jnp.float32)
+    if "ffn" in bp:
+        h2 = L.norm_apply(cfg, bp["norm2"], x)
+        if is_moe:
+            y, aux = L.moe_apply(cfg, bp["ffn"], h2)
+        else:
+            y = L.mlp_apply(cfg, bp["ffn"], h2)
+        x = x + y
+    return x, aux
+
+
+def _scan_blocks(cfg, params, x, positions, window, enc_out=None):
+    kinds = cfg.layer_kinds()
+
+    def body(carry, bp):
+        x, aux = carry
+        for i, (kind, is_moe) in enumerate(kinds):
+            x, a = _block_apply(cfg, kind, is_moe, bp[f"l{i}"], x,
+                                positions, window, enc_out)
+            aux = aux + a
+        return (x, aux), None
+
+    if par.ctx().remat == "full":
+        body = jax.checkpoint(body)
+    elif par.ctx().remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"])
+    return x, aux
+
+
+def encode(cfg, params, frames):
+    """Whisper-style encoder over stub frame embeddings (B, Fs, d)."""
+    x = frames + L.sinusoid_pos(frames.shape[1], cfg.d_model).astype(frames.dtype)
+    x = par.constrain(x, "batch", None, None)
+
+    def body(x, bp):
+        h = L.norm_apply(cfg, bp["norm1"], x)
+        o, _ = L.attn_apply(cfg, bp["mixer"], h, causal=False)
+        x = x + o
+        h2 = L.norm_apply(cfg, bp["norm2"], x)
+        x = x + L.mlp_apply(cfg, bp["ffn"], h2)
+        return x, None
+
+    if par.ctx().remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.norm_apply(cfg, params["enc_final_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# Training forward / loss
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: ModelConfig, params: Params, tokens, *, prefix=None,
+            frames=None, window="cfg"):
+    """Training forward.  tokens: (B, S) int32.  prefix: (B, P, d) VLM
+    patch embeddings.  frames: (B, Fs, d) audio stub (enc-dec only).
+    Returns logits (B, S, padded_vocab)."""
+    win = cfg.window if window == "cfg" else window
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = par.constrain(x, "batch", None, None)
+    pos_offset = 0
+    if prefix is not None:
+        x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+        pos_offset = prefix.shape[1]
+    s_total = x.shape[1]
+    if cfg.pos_embed == "sinusoid":
+        x = x + L.sinusoid_pos(s_total, cfg.d_model).astype(x.dtype)
+    positions = jnp.arange(s_total)
+
+    enc_out = encode(cfg, params, frames) if frames is not None else None
+    x, aux = _scan_blocks(cfg, params, x, positions, win, enc_out)
+    x = L.norm_apply(cfg, params["final_norm"], x)
+    if prefix is not None:
+        x = x[:, pos_offset:]
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", x, head)
+    logits = par.constrain(logits, "batch", None, "vocab")
+    return logits, aux
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch) -> jax.Array:
+    """Next-token cross entropy (+ MoE aux)."""
+    tokens = batch["tokens"]
+    logits, aux = forward(
+        cfg, params, tokens,
+        prefix=batch.get("prefix"), frames=batch.get("frames"),
+    )
+    logits = logits.astype(jnp.float32)
+    # Mask padded vocab entries out of the partition function.
+    if cfg.padded_vocab != cfg.vocab:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    targets = tokens[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    nll = -jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean() + AUX_COEF * aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _cache_len(cfg, max_len: int, window) -> int:
+    win = cfg.window if window == "cfg" else window
+    return min(max_len, win) if win else max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32,
+               window="cfg") -> dict:
+    g = cfg.n_groups
+    s = _cache_len(cfg, max_len, window)
+    kinds = cfg.layer_kinds()
+    cache: dict = {}
+    for i, (kind, _) in enumerate(kinds):
+        if kind == "attn":
+            if cfg.attn_kind == "mla":
+                c = {
+                    "ckv": jnp.zeros((g, batch, s, cfg.kv_lora_rank), dtype),
+                    "kr": jnp.zeros((g, batch, s, cfg.qk_rope_dim), dtype),
+                }
+            else:
+                c = {
+                    "k": jnp.zeros((g, batch, cfg.n_kv_heads, s, cfg.head_dim), dtype),
+                    "v": jnp.zeros((g, batch, cfg.n_kv_heads, s, cfg.head_dim), dtype),
+                }
+        else:
+            conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+            c = {
+                "conv": jnp.zeros((g, batch, cfg.conv_kernel - 1, conv_dim), dtype),
+                "ssm": jnp.zeros(
+                    (g, batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+                    jnp.float32,
+                ),
+            }
+        if cfg.encoder_layers:
+            c["xk"] = jnp.zeros(
+                (g, batch, cfg.n_kv_heads, cfg.frontend_seq, cfg.head_dim), dtype
+            )
+            c["xv"] = jnp.zeros_like(c["xk"])
+        cache[f"l{i}"] = c
+    return cache
+
+
+def _block_decode(cfg, kind, is_moe, bp, x, cache_slice, pos, window=None,
+                  ring=False):
+    h = L.norm_apply(cfg, bp["norm1"], x)
+    if kind == "attn":
+        if cfg.attn_kind == "mla":
+            o, new_kv = L.mla_decode(cfg, bp["mixer"], h, cache_slice, pos)
+        else:
+            o, new_kv = L.attn_decode(cfg, bp["mixer"], h, cache_slice, pos,
+                                      window=window, ring=ring)
+    else:
+        o, new_kv = L.mamba_decode(cfg, bp["mixer"], h, cache_slice, pos)
+    x = x + o
+    if "cross" in bp:
+        hx = L.norm_apply(cfg, bp["norm_x"], x)
+        x = x + L.cross_apply(cfg, bp["cross"], hx,
+                              (cache_slice["xk"], cache_slice["xv"]))
+        new_kv = dict(new_kv, xk=cache_slice["xk"], xv=cache_slice["xv"])
+    if "ffn" in bp:
+        h2 = L.norm_apply(cfg, bp["norm2"], x)
+        if is_moe:
+            y, _ = L.moe_apply(cfg, bp["ffn"], h2)
+        else:
+            y = L.mlp_apply(cfg, bp["ffn"], h2)
+        x = x + y
+    return x, new_kv
+
+
+def decode_step(cfg: ModelConfig, params: Params, token, cache, pos,
+                window="cfg"):
+    """One decode step.  token: (B, 1) int32; pos: () int32 — the absolute
+    position being written.  Returns (logits (B, V), new cache)."""
+    kinds = cfg.layer_kinds()
+    win = cfg.window if window == "cfg" else window
+    # Ring-buffer mode: a windowed cache shorter than the position range.
+    s_cache = None
+    for i, (kind, _) in enumerate(kinds):
+        if kind == "attn" and cfg.attn_kind != "mla":
+            s_cache = cache[f"l{i}"]["k"].shape[3]
+            break
+    ring = win is not None and s_cache is not None and s_cache == win
+    x = jnp.take(params["embed"], token, axis=0)
+    if cfg.pos_embed == "sinusoid":
+        half = cfg.d_model // 2
+        freqs = 1.0 / (
+            10000 ** (2.0 * jnp.arange(half, dtype=jnp.float32) / cfg.d_model)
+        )
+        ang = pos.astype(jnp.float32) * freqs
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
+        x = x + pe.astype(x.dtype)
+
+    def body(x, scanned):
+        bp, csl = scanned
+        new = {}
+        for i, (kind, is_moe) in enumerate(kinds):
+            x, nkv = _block_decode(cfg, kind, is_moe, bp[f"l{i}"], x,
+                                   csl[f"l{i}"], pos, window=win, ring=ring)
+            new[f"l{i}"] = nkv
+        return x, new
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = L.norm_apply(cfg, params["final_norm"], x)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", x, head)[:, 0]
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens, *, prefix=None,
+            frames=None, max_len: int | None = None, window="cfg"):
+    """Process the prompt, returning (last-token logits, cache, next_pos).
+
+    Runs the full-sequence forward and writes K/V (or SSM states) into a
+    fresh cache of length ``max_len`` (defaults to prompt length)."""
+    b, s = tokens.shape
+    win = cfg.window if window == "cfg" else window
+    max_len = max_len or s
+    kinds = cfg.layer_kinds()
+    cache = init_cache(cfg, b, max_len, dtype=params["embed"].dtype,
+                       window=window)
+    s_cache = _cache_len(cfg, max_len, window)
+
+    x = jnp.take(params["embed"], tokens, axis=0)
+    pos_offset = 0
+    if prefix is not None:
+        x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+        pos_offset = prefix.shape[1]
+    s_total = x.shape[1]
+    if cfg.pos_embed == "sinusoid":
+        x = x + L.sinusoid_pos(s_total, cfg.d_model).astype(x.dtype)
+    positions = jnp.arange(s_total)
+    enc_out = encode(cfg, params, frames) if frames is not None else None
+
+    def body(x, bp):
+        new = {}
+        for i, (kind, is_moe) in enumerate(kinds):
+            bpi = bp[f"l{i}"]
+            h = L.norm_apply(cfg, bpi["norm1"], x)
+            if kind == "attn":
+                if cfg.attn_kind == "mla":
+                    o, (ckv, kr) = L.mla_apply(cfg, bpi["mixer"], h,
+                                               positions=positions, window=win)
+                    c = {
+                        "ckv": _fit(ckv, s_cache, axis=1),
+                        "kr": _fit(kr[:, 0], s_cache, axis=1),
+                    }
+                else:
+                    o, (k, v) = L.attn_apply(cfg, bpi["mixer"], h,
+                                             positions=positions, window=win)
+                    c = {"k": _fit(k, s_cache, axis=2), "v": _fit(v, s_cache, axis=2)}
+            else:
+                o, mc = L.mamba_apply(cfg, bpi["mixer"], h, return_state=True)
+                c = mc
+            x = x + o
+            if enc_out is not None and "cross" in bpi:
+                hx = L.norm_apply(cfg, bpi["norm_x"], x)
+                kv = L.cross_kv(cfg, bpi["cross"], enc_out)
+                x = x + L.cross_apply(cfg, bpi["cross"], hx, kv)
+                c = dict(c, xk=kv[0], xv=kv[1])
+            if "ffn" in bpi:
+                h2 = L.norm_apply(cfg, bpi["norm2"], x)
+                if is_moe:
+                    y, _ = L.moe_apply(cfg, bpi["ffn"], h2)
+                else:
+                    y = L.mlp_apply(cfg, bpi["ffn"], h2)
+                x = x + y
+            new[f"l{i}"] = c
+        return x, new
+
+    x, cache_out = jax.lax.scan(body, x, params["blocks"])
+    # Pad/trim collected caches into the target cache length.
+    cache = jax.tree.map(lambda dst, src: src.astype(dst.dtype), cache, cache_out)
+    x = L.norm_apply(cfg, params["final_norm"], x)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,vd->bv", x[:, -1], head)
+    return logits, cache, s_total
+
+
+def _fit(x, target_len: int, axis: int):
+    """Pad (with zeros, right) or keep the trailing window of ``x`` along
+    ``axis`` so it matches the cache length."""
+    s = x.shape[axis]
+    if s == target_len:
+        return x
+    if s > target_len:  # windowed cache: keep the last target_len entries
+        idx = [slice(None)] * x.ndim
+        idx[axis] = slice(s - target_len, s)
+        return x[tuple(idx)]
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target_len - s)
+    return jnp.pad(x, pad)

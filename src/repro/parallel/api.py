@@ -1,0 +1,133 @@
+"""Parallelism context threaded through the model stack.
+
+Models stay pure functions; sharding is injected via a context (mesh +
+logical-axis rules).  ``constrain`` is a no-op outside a mesh so the same
+model code runs in single-device smoke tests, the multi-pod dry-run, and
+real launches.
+
+Logical activation axes:
+  batch  -> (pod, data)   data parallel (pods are an outer DP axis;
+                          optionally a PP axis, see pipeline.py)
+  seq    -> None          (model axis under sequence parallelism)
+  heads / ff / experts / vocab -> model   tensor / expert parallel
+
+Param sharding rules live in sharding.py and use divisibility-aware
+helpers so archs whose head counts don't divide the model axis degrade
+to replication on that dim instead of uneven GSPMD padding.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_sp": "model",      # sequence-parallel alternative for long context
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "experts": "model",
+    "vocab": "model",
+    "embed": None,
+    "state": None,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCtx:
+    mesh: Mesh | None = None
+    rules: Mapping[str, Any] = dataclasses.field(default_factory=lambda: DEFAULT_RULES)
+    fsdp: bool = False            # ZeRO-3: shard params/opt-state over 'data'
+    seq_parallel: bool = False    # shard long sequences over 'model'
+    moe_impl: str = "epsum"       # "epsum" | "a2a" | "local"
+    a2a_int8: bool = False        # int8 wire format for the MoE dispatch
+    remat: str = "none"           # "none" | "full" | "dots"
+    compress_grads: bool = False  # int8 error-feedback all-reduce
+
+    def axis_size(self, logical: str) -> int:
+        if self.mesh is None:
+            return 1
+        axes = self.rules.get(logical)
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        size = 1
+        for a in axes:
+            if a in self.mesh.shape:
+                size *= self.mesh.shape[a]
+        return size
+
+    def spec(self, *logical: Any) -> P:
+        """Map logical axes (or None) to a PartitionSpec under the rules,
+        dropping mesh axes that don't exist in the current mesh."""
+        parts = []
+        for l in logical:
+            if l is None:
+                parts.append(None)
+                continue
+            axes = self.rules.get(l, None) if isinstance(l, str) else l
+            if axes is None:
+                parts.append(None)
+            elif isinstance(axes, str):
+                parts.append(axes if self._has(axes) else None)
+            else:
+                kept = tuple(a for a in axes if self._has(a))
+                parts.append(kept if kept else None)
+        return P(*parts)
+
+    def _has(self, axis: str) -> bool:
+        return self.mesh is not None and axis in self.mesh.shape
+
+
+_STATE = threading.local()
+
+
+def ctx() -> ParallelCtx:
+    return getattr(_STATE, "ctx", None) or ParallelCtx()
+
+
+@contextlib.contextmanager
+def use(pctx: ParallelCtx):
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = pctx
+    try:
+        yield pctx
+    finally:
+        _STATE.ctx = prev
+
+
+def constrain(x: jax.Array, *logical: Any) -> jax.Array:
+    """with_sharding_constraint under the active mesh; no-op otherwise.
+
+    Dims whose size doesn't divide the assigned mesh axes fall back to
+    replication (avoids GSPMD padding surprises).
+    """
+    c = ctx()
+    if c.mesh is None:
+        return x
+    spec = c.spec(*logical)
+    parts = []
+    for dim, p in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
+        if p is None:
+            parts.append(None)
+            continue
+        axes = (p,) if isinstance(p, str) else p
+        size = 1
+        for a in axes:
+            size *= c.mesh.shape[a]
+        parts.append(p if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(c.mesh, P(*parts))
+    )
+
+
+def batch_spec() -> P:
+    return ctx().spec("batch")

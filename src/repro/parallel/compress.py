@@ -1,0 +1,124 @@
+"""Int8 error-feedback gradient compression (distributed-optimization
+trick; opt-in via ParallelCtx.compress_grads).
+
+The DP gradient all-reduce moves full-precision gradients; at 1000+
+nodes the cross-pod links are the bottleneck.  This module quantises
+each gradient leaf to int8 (per-leaf absmax scaling) before it crosses
+the wire and keeps the quantisation residual in an error-feedback
+accumulator folded into the next step — the standard 1-bit-Adam / EF21
+recipe, which preserves convergence.
+
+In the pjit path XLA owns the all-reduce, so compression is expressed as
+quantise→dequantise around the gradient (the wire format is what a
+custom shard_map reduction would send; the simulated-compression mode
+still exercises the numerics end-to-end).  ``shard_map_all_reduce``
+is the explicit-collective variant for mesh runs: reduce-scatter in
+int8, dequantise, all-gather.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array):
+    absmax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = absmax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(grads):
+    """Quantise/dequantise each leaf (wire-format numerics, pjit path)."""
+    def one(g):
+        q, s = quantize_int8(g.astype(jnp.float32))
+        return dequantize_int8(q, s).astype(g.dtype)
+    return jax.tree.map(one, grads)
+
+
+def ef_compress(grads, errors):
+    """Error-feedback compression: returns (wire_grads, new_errors)."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = quantize_int8(g32)
+        deq = dequantize_int8(q, s)
+        return deq.astype(g.dtype), g32 - deq
+    flat = jax.tree.map(one, grads, errors)
+    wire = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    errs = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    return wire, errs
+
+
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def int8_all_to_all(x: jax.Array, axis: str) -> jax.Array:
+    """all_to_all with int8 wire format in BOTH directions (per-row absmax
+    scales ride along in f32).  The MoE a2a dispatch moves activations —
+    int8 token rows halve the dominant collective term (§Perf iteration
+    B4; DeepSeek-V3 ships fp8 dispatch on GPUs — int8 is the TPU-friendly
+    equivalent).  Rounding error enters the forward like any activation
+    quantisation; the backward quantises the incoming cotangent the same
+    way.  x: (D, C, d) -> (D, C, d)."""
+    return _i8_a2a_fwd(x, axis)[0]
+
+
+def _quant_rows(x):
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _a2a_both(x, axis):
+    q, scale = _quant_rows(x)
+    q = jax.lax.all_to_all(q, axis, 0, 0)
+    scale = jax.lax.all_to_all(scale, axis, 0, 0)
+    return (q.astype(jnp.float32) * scale).astype(x.dtype)
+
+
+def _i8_a2a_fwd(x, axis):
+    return _a2a_both(x, axis), None
+
+
+def _i8_a2a_bwd(axis, _, dy):
+    return (_a2a_both(dy, axis),)
+
+
+int8_all_to_all.defvjp(_i8_a2a_fwd, _i8_a2a_bwd)
+
+
+def shard_map_all_reduce(grads, mesh, axes=("pod", "data")):
+    """Explicit int8 all-reduce over the DP axes inside shard_map:
+    quantise → psum int32 → dequantise (mean).  Collective bytes drop 4x
+    vs f32 (2x vs bf16); used by the §Perf collective hillclimb."""
+    from jax.sharding import PartitionSpec as P
+
+    axes = tuple(a for a in axes if a in mesh.shape)
+    if not axes:
+        return grads
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+
+    def island(g):
+        q, s = quantize_int8(g.astype(jnp.float32))
+        qsum = q.astype(jnp.int32)
+        for a in axes:
+            qsum = jax.lax.psum(qsum, a)
+            s = jax.lax.pmax(s, a)
+        return (qsum.astype(jnp.float32) * s / n).astype(g.dtype)
+
+    def one(g):
+        return jax.shard_map(
+            island, mesh=mesh,
+            in_specs=P(*[None] * g.ndim), out_specs=P(*[None] * g.ndim),
+            check_vma=False,
+        )(g)
+
+    return jax.tree.map(one, grads)

@@ -1,0 +1,164 @@
+"""Parameter / cache / optimizer-state sharding rules.
+
+Maps every param-tree leaf to a PartitionSpec by its path:
+
+  TP  ('model'):  attention projections, MLP in/out, expert dims (EP),
+                  vocab (embed & head).
+  FSDP ('data'):  with ``fsdp=True``, each leaf additionally shards its
+                  largest still-unsharded divisible dim over 'data'
+                  (ZeRO-3: params *and* optimizer state; the backward
+                  all-gathers re-materialise full params per layer).
+
+Divisibility-aware: a dim that doesn't divide the mesh axis stays
+replicated (e.g. 40 heads on a 16-lane model axis) rather than relying
+on GSPMD padding.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.parallel.api import ParallelCtx
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape.get(axis, 1)
+    return int(np.prod([mesh.shape.get(a, 1) for a in axis]))
+
+
+def _path_strs(path) -> tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return tuple(out)
+
+
+def _trailing_spec(path: tuple[str, ...], ndim_unstacked: int,
+                   moe_impl: str = "epsum") -> tuple[Any, ...]:
+    """TP spec over the leaf's *unstacked* trailing dims."""
+    name = path[-1]
+    in_ffn = "ffn" in path
+    in_mixer = "mixer" in path or "cross" in path
+    shared = "shared" in path
+
+    if name in ("embed", "lm_head"):
+        return ("model", None)
+    if in_ffn and not shared:
+        if name == "router":
+            return (None, None)
+        if ndim_unstacked == 3:           # MoE expert weights (E, d, f)
+            if moe_impl == "a2a":
+                # Fully sharded, never gathered: experts over 'data',
+                # expert-FFN dim over 'model' — matches the a2a island.
+                if name in ("w1", "w3"):
+                    return ("data", None, "model")
+                return ("data", "model", None)
+            return ("model", None, None)  # expert parallel — matches island
+        if name in ("w1", "w3"):
+            return (None, "model")
+        if name == "w2":
+            return ("model", None)
+    if in_ffn and shared:
+        return (None, "model") if name in ("w1", "w3") else ("model", None)
+    if in_mixer:
+        if name in ("wq", "wk", "wv", "w_uq", "w_uk", "w_uv", "w_in"):
+            return (None, "model")
+        if name in ("wo", "w_out"):
+            return ("model", None)
+        # w_dq / w_dkv / conv / a_log / dt_bias / d_skip / norms
+        return (None,) * ndim_unstacked
+    return (None,) * ndim_unstacked
+
+
+def spec_for(path: tuple[str, ...], shape: tuple[int, ...], pctx: ParallelCtx) -> P:
+    mesh = pctx.mesh
+    if mesh is None:
+        return P()
+    ndim = len(shape)
+    # Leaves under "blocks"/"encoder" carry one stacked leading group dim.
+    n_stack = 1 if ("blocks" in path or "encoder" in path) else 0
+    trailing = _trailing_spec(path, ndim - n_stack, moe_impl=pctx.moe_impl)
+    spec_full = [None] * (ndim - len(trailing)) + list(trailing)
+
+    # Drop non-divisible 'model' entries.
+    for i, ax in enumerate(spec_full):
+        if ax is not None and shape[i] % _axis_size(mesh, ax) != 0:
+            spec_full[i] = None
+
+    # FSDP: shard the largest remaining dim over 'data' (and 'pod' if
+    # present — fully sharded across all DP lanes).  Axes already used by
+    # the TP spec (e.g. a2a expert weights on 'data') are excluded — a
+    # PartitionSpec may not repeat a mesh axis.
+    if pctx.fsdp:
+        used: set = set()
+        for ax in spec_full:
+            if ax is None:
+                continue
+            used.update((ax,) if isinstance(ax, str) else ax)
+        dp_axes = tuple(a for a in ("pod", "data")
+                        if a in mesh.shape and a not in used)
+        dp = _axis_size(mesh, dp_axes)
+        if dp > 1:
+            cand = [
+                (shape[i], i)
+                for i in range(ndim)
+                if spec_full[i] is None and shape[i] % dp == 0 and shape[i] >= dp
+            ]
+            if cand:
+                _, i = max(cand)
+                spec_full[i] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    return P(*spec_full)
+
+
+def param_shardings(params, pctx: ParallelCtx):
+    """PyTree of NamedShardings matching ``params``."""
+    mesh = pctx.mesh
+
+    def one(path, leaf):
+        p = _path_strs(path)
+        return NamedSharding(mesh, spec_for(p, leaf.shape, pctx))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def cache_shardings(cfg, cache, pctx: ParallelCtx):
+    """KV/SSM cache shardings: batch over DP axes; head_dim (GQA), latent
+    rank (MLA) or SSM heads over 'model' — chosen to divide for every
+    assigned arch (DESIGN.md §5)."""
+    mesh = pctx.mesh
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    bspec = batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None)
+
+    def one(path, leaf):
+        p = _path_strs(path)
+        name = p[-1]
+        if name in ("k", "v", "xk", "xv"):      # (g, B, kv, S, hd)
+            spec: tuple[Any, ...] = (None, bspec, None, None, "model")
+        elif name == "ckv":                      # (g, B, S, r)
+            spec = (None, bspec, None, "model")
+        elif name == "kr":                       # (g, B, S, rope)
+            spec = (None, bspec, None, None)
+        elif name == "ssm":                      # (g, B, h, st, hd)
+            spec = (None, bspec, "model", None, None)
+        elif name == "conv":                     # (g, B, K-1, C)
+            spec = (None, bspec, None, "model")
+        else:
+            spec = (None, bspec) + (None,) * (leaf.ndim - 2)
+        spec = list(spec[: leaf.ndim])
+        for i, ax in enumerate(spec):
+            if ax is not None and leaf.shape[i] % _axis_size(mesh, ax) != 0:
+                spec[i] = None
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache)

@@ -1,0 +1,72 @@
+"""Serving substrate: prefill + decode step builders, batched requests.
+
+decode_step is the latency path: one token per call against the KV/SSM
+cache (sharded per parallel/sharding.py: batch over DP, head-dim /
+latent-rank / SSM-heads over 'model').  The cache is donated so decode
+is in-place on device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.parallel import api as par
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_len: int
+    window: Any = "cfg"       # "cfg" or explicit int/None (long-context cells)
+    param_dtype: str = "bfloat16"
+
+
+def build_prefill(cfg: ModelConfig, scfg: ServeConfig, pctx: par.ParallelCtx):
+    def prefill_fn(params, tokens, prefix=None, frames=None):
+        with par.use(pctx):
+            return T.prefill(
+                cfg, params, tokens, prefix=prefix, frames=frames,
+                max_len=scfg.max_len, window=scfg.window,
+            )
+
+    return prefill_fn
+
+
+def build_decode(cfg: ModelConfig, scfg: ServeConfig, pctx: par.ParallelCtx):
+    def decode_fn(params, token, cache, pos):
+        with par.use(pctx):
+            return T.decode_step(cfg, params, token, cache, pos,
+                                 window=scfg.window)
+
+    return decode_fn
+
+
+def greedy_generate(cfg, params, prompt, steps: int, scfg: ServeConfig,
+                    pctx: par.ParallelCtx, prefix=None, frames=None,
+                    temperature: float = 0.0, key=None):
+    """Reference generation loop (host-driven) used by examples/tests."""
+    prefill_fn = jax.jit(build_prefill(cfg, scfg, pctx), static_argnames=())
+    decode_fn = jax.jit(build_decode(cfg, scfg, pctx))
+    logits, cache, pos = prefill_fn(params, prompt, prefix, frames)
+    toks = []
+    tok = _sample(logits, temperature, key, cfg.vocab)
+    toks.append(tok)
+    for i in range(steps - 1):
+        logits, cache = decode_fn(params, tok[:, None], cache, jnp.asarray(pos + i))
+        if key is not None:
+            key = jax.random.fold_in(key, i)
+        tok = _sample(logits, temperature, key, cfg.vocab)
+        toks.append(tok)
+    return jnp.stack(toks, axis=1)
+
+
+def _sample(logits, temperature, key, vocab):
+    logits = logits[..., :vocab]
+    if temperature <= 0.0 or key is None:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(key, logits / temperature, axis=-1)

@@ -1,0 +1,186 @@
+"""Optimizers + LR schedules (no optax dependency — pure JAX pytrees).
+
+* adamw     — default.  Moments live in f32 with the params' sharding, so
+              FSDP shards optimizer state too (ZeRO).
+* adafactor — factored second moments for ndim>=2 leaves; the memory
+              answer for the 1 T-param config (Adam state for kimi-k2
+              would need ~16 TB > a pod's 8.2 TB HBM — EXPERIMENTS.md).
+              Supports bf16 params with stochastic rounding.
+* sgdm      — baseline.
+
+All updates are pure: (grads, state, params) -> (new_params, new_state).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"
+    lr: float = 3e-4
+    warmup: int = 100
+    decay_steps: int = 10_000
+    schedule: str = "cosine"        # "cosine" | "linear" | "const"
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # adafactor
+    factored_threshold: int = 2
+    stochastic_rounding: bool = False
+
+
+def lr_at(cfg: OptConfig, step) -> jax.Array:
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup) / jnp.maximum(cfg.decay_steps - cfg.warmup, 1), 0, 1)
+    if cfg.schedule == "cosine":
+        decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - (1 - cfg.min_lr_frac) * t
+    else:
+        decay = jnp.asarray(1.0)
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def clip_by_norm(tree, max_norm):
+    g = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), g
+
+
+# ---------------------------------------------------------------------------
+
+
+def init_state(cfg: OptConfig, params) -> dict:
+    if cfg.name == "adamw":
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+    if cfg.name == "adafactor":
+        def fact(p):
+            if p.ndim >= cfg.factored_threshold and p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(fact, params, is_leaf=lambda x: hasattr(x, "shape"))}
+    if cfg.name == "sgdm":
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+    raise ValueError(cfg.name)
+
+
+def _bf16_neighbor(down: jax.Array, toward_up: jax.Array) -> jax.Array:
+    """Adjacent bf16 value in the given direction (bit-level nextafter —
+    f32 nextafter would round back to the same bf16)."""
+    bits = jax.lax.bitcast_convert_type(down, jnp.uint16)
+    positive = (bits & 0x8000) == 0
+    inc = jnp.where(positive == toward_up, jnp.uint16(1), jnp.uint16(0xFFFF))
+    stepped = (bits + inc).astype(jnp.uint16)
+    # ±0 special case: step into the smallest (sub)normal of the right sign.
+    is_zero = (bits & 0x7FFF) == 0
+    stepped = jnp.where(is_zero,
+                        jnp.where(toward_up, jnp.uint16(0x0001), jnp.uint16(0x8001)),
+                        stepped)
+    return jax.lax.bitcast_convert_type(stepped, jnp.bfloat16)
+
+
+def _stochastic_round_to(x32: jax.Array, dtype, key) -> jax.Array:
+    if dtype != jnp.bfloat16:
+        return x32.astype(dtype)
+    down = x32.astype(jnp.bfloat16)          # round-to-nearest anchor
+    down32 = down.astype(jnp.float32)
+    toward_up = x32 > down32
+    other = _bf16_neighbor(down, toward_up)  # bracket x32 between bf16s
+    other32 = other.astype(jnp.float32)
+    span = jnp.abs(other32 - down32)
+    pfar = jnp.where(span > 0, jnp.abs(x32 - down32) / jnp.maximum(span, 1e-45), 0.0)
+    u = jax.random.uniform(key, x32.shape)
+    return jnp.where(u < pfar, other, down)
+
+
+def apply_updates(cfg: OptConfig, grads, state, params, step, key=None):
+    """Returns (new_params, new_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads, gnorm = clip_by_norm(grads, cfg.clip_norm)
+    lr = lr_at(cfg, step)
+    t = jnp.asarray(step, jnp.float32) + 1.0
+
+    if cfg.name == "adamw":
+        b1, b2 = cfg.b1, cfg.b2
+        new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+        new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(p, m, v):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, new_m, new_v)
+        return new_params, {"m": new_m, "v": new_v}, {"gnorm": gnorm, "lr": lr}
+
+    if cfg.name == "adafactor":
+        d2 = 0.999  # v decay
+        keys = None
+        if cfg.stochastic_rounding:
+            n = len(jax.tree.leaves(params))
+            key = key if key is not None else jax.random.PRNGKey(0)
+            keys = list(jax.random.split(key, n))
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_f = tdef.flatten_up_to(state["f"])
+        new_f, new_p = [], []
+        for i, (p, g, f) in enumerate(zip(flat_p, flat_g, flat_f)):
+            g2 = g * g + 1e-30
+            if "vr" in f:
+                vr = d2 * f["vr"] + (1 - d2) * g2.mean(-1)
+                vc = d2 * f["vc"] + (1 - d2) * g2.mean(-2)
+                denom = (
+                    (vr / jnp.maximum(vr.mean(-1, keepdims=True), 1e-30))[..., None]
+                    * vc[..., None, :]
+                )
+                u = g / jnp.sqrt(denom + 1e-30)
+                nf = {"vr": vr, "vc": vc}
+            else:
+                v = d2 * f["v"] + (1 - d2) * g2
+                u = g / jnp.sqrt(v + 1e-30)
+                nf = {"v": v}
+            # Update clipping (Adafactor RMS rule).
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms)
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+            p32 = p.astype(jnp.float32) - lr * u
+            if cfg.stochastic_rounding and p.dtype == jnp.bfloat16:
+                new_p.append(_stochastic_round_to(p32, p.dtype, keys[i]))
+            else:
+                new_p.append(p32.astype(p.dtype))
+            new_f.append(nf)
+        return (
+            jax.tree.unflatten(tdef, new_p),
+            {"f": jax.tree.unflatten(tdef, new_f)},
+            {"gnorm": gnorm, "lr": lr},
+        )
+
+    if cfg.name == "sgdm":
+        new_m = jax.tree.map(lambda m, g: 0.9 * m + g, state["m"], grads)
+        new_params = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype), params, new_m
+        )
+        return new_params, {"m": new_m}, {"gnorm": gnorm, "lr": lr}
+
+    raise ValueError(cfg.name)

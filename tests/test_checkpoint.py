@@ -1,0 +1,67 @@
+"""Checkpointing: roundtrip, atomicity, retention, manifest metadata."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.train import checkpoint as ck
+
+
+def make_state(scale=1.0):
+    return {
+        "params": {"w": jnp.arange(12.0).reshape(3, 4) * scale,
+                   "blocks": {"l0": {"w1": jnp.ones((2, 5)) * scale}}},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_roundtrip(tmp_path):
+    state = make_state()
+    ck.save(str(tmp_path), state, step=7)
+    restored, manifest = ck.restore(str(tmp_path), jax.eval_shape(lambda: state))
+    assert manifest["step"] == 7
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_selected(tmp_path):
+    ck.save(str(tmp_path), make_state(1.0), step=1)
+    ck.save(str(tmp_path), make_state(2.0), step=2)
+    restored, manifest = ck.restore(str(tmp_path), jax.eval_shape(make_state))
+    assert manifest["step"] == 2
+    assert float(restored["params"]["w"][0, 1]) == 2.0
+
+
+def test_restore_specific_step(tmp_path):
+    ck.save(str(tmp_path), make_state(1.0), step=1)
+    ck.save(str(tmp_path), make_state(2.0), step=2)
+    restored, manifest = ck.restore(str(tmp_path), jax.eval_shape(make_state), step=1)
+    assert manifest["step"] == 1
+
+
+def test_no_tmp_dirs_left(tmp_path):
+    ck.save(str(tmp_path), make_state(), step=3)
+    assert not [d for d in os.listdir(tmp_path) if ".tmp" in d]
+
+
+def test_manager_retention_and_async(tmp_path):
+    mgr = ck.CheckpointManager(str(tmp_path), keep=2)
+    for s in (10, 20, 30, 40):
+        mgr.save_async(make_state(float(s)), s)
+    mgr.wait()
+    steps = ck.list_steps(str(tmp_path))
+    assert steps == [30, 40]
+    assert mgr.latest_step() == 40
+
+
+def test_restore_missing_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ck.restore(str(tmp_path / "nope"), jax.eval_shape(make_state))
+
+
+def test_extra_metadata(tmp_path):
+    ck.save(str(tmp_path), make_state(), step=5, extra={"loss": 1.25})
+    _, manifest = ck.restore(str(tmp_path), jax.eval_shape(make_state))
+    assert manifest["extra"]["loss"] == 1.25

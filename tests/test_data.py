@@ -1,0 +1,79 @@
+"""Data pipeline + DDC curation tests."""
+import numpy as np
+import pytest
+
+from repro.data import curation, pipeline, spatial
+
+
+def dcfg(**kw):
+    base = dict(vocab=512, seq_len=32, global_batch=4, seed=3,
+                n_latent_clusters=8)
+    base.update(kw)
+    return pipeline.DataConfig(**base)
+
+
+class TestPipeline:
+    def test_deterministic(self):
+        a = pipeline.batch_at(dcfg(), 7)
+        b = pipeline.batch_at(dcfg(), 7)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+    def test_distinct_batches(self):
+        a = pipeline.batch_at(dcfg(), 1)
+        b = pipeline.batch_at(dcfg(), 2)
+        assert not np.array_equal(a["tokens"], b["tokens"])
+
+    def test_restart_exact(self):
+        """Fault tolerance: restarting at step k reproduces the stream."""
+        it = pipeline.iterate(dcfg(), 0)
+        seq1 = [next(it)["tokens"] for _ in range(5)]
+        it2 = pipeline.iterate(dcfg(), 3)
+        np.testing.assert_array_equal(seq1[3], next(it2)["tokens"])
+
+    def test_frontend_stubs(self):
+        cfg = dcfg(frontend="audio_stub", frontend_seq=10, d_model=16)
+        b = pipeline.batch_at(cfg, 0)
+        assert b["frames"].shape == (4, 10, 16)
+        cfg = dcfg(prefix_len=6, d_model=16)
+        assert pipeline.batch_at(cfg, 0)["prefix"].shape == (4, 6, 16)
+
+    def test_token_range(self):
+        b = pipeline.batch_at(dcfg(), 0)
+        assert b["tokens"].min() >= 0 and b["tokens"].max() < 512
+
+
+class TestCuration:
+    def test_finds_cluster_structure(self):
+        cfg = dcfg(n_latent_clusters=6)
+        emb, ids = pipeline.doc_embeddings(cfg, 1200)
+        res = curation.curate(emb)
+        assert 4 <= res.n_clusters <= 8, res.n_clusters
+        # cluster labels should align with latent ids (purity)
+        pure = 0
+        for c in range(res.n_clusters):
+            members = ids[res.labels == c]
+            if len(members):
+                pure += (members == np.bincount(members).argmax()).sum()
+        assert pure / (res.labels >= 0).sum() > 0.9
+
+    def test_weights_normalised_and_balanced(self):
+        cfg = dcfg(n_latent_clusters=4)
+        emb, ids = pipeline.doc_embeddings(cfg, 800)
+        # skew: keep only a quarter of cluster-0 docs (still dense enough
+        # for per-partition DBSCAN to find the cluster)
+        keep = (ids != 0) | (np.arange(800) % 4 == 0)
+        res = curation.curate(emb[keep])
+        assert abs(res.sample_weights.sum() - 1.0) < 1e-9
+        assert res.n_clusters == 4
+        # the rare cluster must be upweighted
+        assert res.sample_weights.max() / res.sample_weights.min() > 1.3
+
+    def test_apply_to_data_config(self):
+        cfg = dcfg(n_latent_clusters=4)
+        emb, ids = pipeline.doc_embeddings(cfg, 400)
+        res = curation.curate(emb)
+        new = curation.apply_to_data_config(cfg, res, ids)
+        assert new.curation_weights is not None
+        assert abs(new.curation_weights.sum() - 1.0) < 1e-9
+        b = pipeline.batch_at(new, 0)
+        assert b["tokens"].shape == (4, 32)

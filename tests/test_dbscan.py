@@ -1,0 +1,85 @@
+"""DBSCAN: TPU-native JAX implementation vs the NumPy oracle."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dbscan as db
+from repro.data import spatial
+
+
+def co_membership(labels: np.ndarray) -> np.ndarray:
+    """Partition-invariant representation: (n, n) same-cluster matrix."""
+    l = labels[:, None]
+    return (l == l.T) & (labels >= 0)[:, None] & (labels >= 0)[None, :]
+
+
+class TestAgainstOracle:
+    @pytest.mark.parametrize("seed,k", [(0, 3), (1, 5), (2, 8)])
+    def test_blobs_exact(self, seed, k):
+        pts, _ = spatial.make_blobs(200, k, seed=seed)
+        ref = db.dbscan_ref(pts, 0.05, 5)
+        res = db.dbscan(jnp.asarray(pts), jnp.ones(len(pts), bool), 0.05, 5)
+        np.testing.assert_array_equal(np.asarray(res.labels), ref)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        seed=st.integers(0, 1000),
+        eps=st.floats(0.02, 0.15),
+        min_pts=st.integers(2, 8),
+    )
+    def test_random_uniform_exact(self, seed, eps, min_pts):
+        rng = np.random.default_rng(seed)
+        pts = rng.uniform(0, 1, (120, 2)).astype(np.float32)
+        ref = db.dbscan_ref(pts, eps, min_pts)
+        res = db.dbscan(jnp.asarray(pts), jnp.ones(len(pts), bool), eps, min_pts)
+        np.testing.assert_array_equal(np.asarray(res.labels), ref)
+
+    def test_padding_mask(self):
+        pts, _ = spatial.make_blobs(100, 3, seed=4)
+        padded = np.concatenate([pts, np.zeros((28, 2), np.float32)])
+        mask = jnp.asarray([True] * 100 + [False] * 28)
+        res = db.dbscan(jnp.asarray(padded), mask, 0.05, 5)
+        ref = db.dbscan_ref(pts, 0.05, 5)
+        np.testing.assert_array_equal(np.asarray(res.labels)[:100], ref)
+        assert (np.asarray(res.labels)[100:] == db.NOISE).all()
+
+    def test_noise_detection(self):
+        pts, _ = spatial.make_blobs(150, 2, seed=5)
+        pts = np.concatenate([pts, np.array([[0.01, 0.99]], np.float32)])
+        res = db.dbscan(jnp.asarray(pts), jnp.ones(len(pts), bool), 0.04, 5)
+        assert np.asarray(res.labels)[-1] == db.NOISE
+
+
+class TestInvariants:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 100))
+    def test_permutation_invariance(self, seed):
+        """Cluster structure must not depend on point order."""
+        pts, _ = spatial.make_blobs(100, 4, seed=seed)
+        rng = np.random.default_rng(seed)
+        perm = rng.permutation(len(pts))
+        a = db.dbscan_ref(pts, 0.05, 5)
+        b = db.dbscan_ref(pts[perm], 0.05, 5)
+        co_a = co_membership(a)[np.ix_(perm, perm)]
+        co_b = co_membership(b)
+        np.testing.assert_array_equal(co_a, co_b)
+
+    def test_labels_are_min_core_index(self):
+        pts, _ = spatial.make_blobs(80, 2, seed=9)
+        res = db.dbscan(jnp.asarray(pts), jnp.ones(len(pts), bool), 0.06, 4)
+        labels = np.asarray(res.labels)
+        core = np.asarray(res.core)
+        for c in set(labels[labels >= 0]):
+            members = np.nonzero(core & (labels == c))[0]
+            assert members.min() == c
+
+    def test_relabel_dense(self):
+        labels = jnp.asarray([5, 5, -1, 9, 9, 9, 5])
+        # roots: 5 and 9 -> but relabel_dense expects min-index labels
+        # (label == own index at roots): construct consistent input
+        labels = jnp.asarray([0, 0, -1, 3, 3, 3, 0])
+        dense = np.asarray(db.relabel_dense(labels, 8))
+        assert dense.tolist() == [0, 0, -1, 1, 1, 1, 0]
+        capped = np.asarray(db.relabel_dense(labels, 1))
+        assert capped.tolist() == [0, 0, -1, -1, -1, -1, 0]

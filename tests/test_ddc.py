@@ -1,0 +1,126 @@
+"""DDC system tests: local phase, merge, host oracle, comm volume.
+
+The distributed shard_map path (8 devices) lives in test_distributed.py.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dbscan as db
+from repro.core import ddc
+from repro.data import spatial
+
+
+CFG = ddc.DDCConfig(eps=0.05, min_pts=5, max_clusters=16, max_verts=64, grid=96)
+
+
+def co(labels):
+    l = np.asarray(labels)
+    return (l[:, None] == l[None, :]) & (l >= 0)[:, None] & (l >= 0)[None, :]
+
+
+class TestLocalPhase:
+    def test_contours_within_budget(self):
+        pts, _ = spatial.make_blobs(300, 4, seed=0)
+        dense, cs = ddc.local_phase(jnp.asarray(pts), jnp.ones(len(pts), bool), CFG)
+        assert int(cs.valid.sum()) == 4
+        assert (np.asarray(cs.counts) <= CFG.max_verts).all()
+        assert not bool(cs.overflow)
+
+    def test_reduction_ratio(self):
+        """The paper's headline: representatives are 1-2% of the data."""
+        pts = spatial.make_d1(10_000, seed=0)
+        dense, cs = ddc.local_phase(
+            jnp.asarray(pts), jnp.ones(len(pts), bool),
+            ddc.DDCConfig(eps=0.02, min_pts=4, max_clusters=32, max_verts=196, grid=128),
+        )
+        sent = int(np.asarray(cs.counts).sum())
+        frac = sent / len(pts)
+        assert frac < 0.25, frac  # grid contours; hull path is ~1-2%
+
+    def test_cluster_sizes_accounted(self):
+        pts, _ = spatial.make_blobs(200, 3, seed=1)
+        dense, cs = ddc.local_phase(jnp.asarray(pts), jnp.ones(len(pts), bool), CFG)
+        labeled = int((np.asarray(dense) >= 0).sum())
+        assert int(np.asarray(cs.sizes).sum()) == labeled
+
+
+class TestMergePair:
+    def test_identity_merge(self):
+        """Merging a ClusterSet with an empty one preserves clusters."""
+        pts, _ = spatial.make_blobs(200, 3, seed=2)
+        _, cs = ddc.local_phase(jnp.asarray(pts), jnp.ones(len(pts), bool), CFG)
+        merged, map_a, map_b = ddc.merge_pair(cs, ddc.empty_clusterset(CFG), CFG)
+        assert int(merged.valid.sum()) == int(cs.valid.sum())
+        assert (np.asarray(map_b) == -1).all()
+
+    def test_split_then_merge_recovers(self):
+        pts, _ = spatial.make_blobs(400, 5, seed=3)
+        full_labels = db.dbscan_ref(pts, CFG.eps, CFG.min_pts)
+        n_true = len(set(full_labels[full_labels >= 0]))
+        m1 = jnp.arange(len(pts)) % 2 == 0
+        _, cs1 = ddc.local_phase(jnp.asarray(pts), m1, CFG)
+        _, cs2 = ddc.local_phase(jnp.asarray(pts), ~m1, CFG)
+        merged, _, _ = ddc.merge_pair(cs1, cs2, CFG)
+        assert int(merged.valid.sum()) == n_true
+
+    def test_commutative_cluster_count(self):
+        pts, _ = spatial.make_blobs(300, 4, seed=4)
+        m = jnp.arange(len(pts)) < 150
+        _, a = ddc.local_phase(jnp.asarray(pts), m, CFG)
+        _, b = ddc.local_phase(jnp.asarray(pts), ~m, CFG)
+        ab, _, _ = ddc.merge_pair(a, b, CFG)
+        ba, _, _ = ddc.merge_pair(b, a, CFG)
+        assert int(ab.valid.sum()) == int(ba.valid.sum())
+        np.testing.assert_allclose(
+            np.sort(np.asarray(ab.sizes)), np.sort(np.asarray(ba.sizes))
+        )
+
+    def test_sizes_conserved(self):
+        pts, _ = spatial.make_blobs(300, 4, seed=5)
+        m = jnp.arange(len(pts)) < 150
+        _, a = ddc.local_phase(jnp.asarray(pts), m, CFG)
+        _, b = ddc.local_phase(jnp.asarray(pts), ~m, CFG)
+        merged, _, _ = ddc.merge_pair(a, b, CFG)
+        assert int(np.asarray(merged.sizes).sum()) == (
+            int(np.asarray(a.sizes).sum()) + int(np.asarray(b.sizes).sum())
+        )
+
+
+class TestHostDDC:
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 50), parts=st.sampled_from([2, 4, 8]))
+    def test_matches_sequential_dbscan_on_blobs(self, seed, parts):
+        """Paper claim: DDC(partitioned) == sequential clustering (here on
+        well-separated data, where the equivalence is exact)."""
+        pts, _ = spatial.make_blobs(240, 4, seed=seed, spread=0.015)
+        seq = db.dbscan_ref(pts, 0.05, 5)
+        glab, polys, _ = ddc.ddc_host(pts, parts, eps=0.05, min_pts=5)
+        both = (seq >= 0) & (glab >= 0)
+        np.testing.assert_array_equal(co(seq)[both][:, both], co(glab)[both][:, both])
+
+    def test_comm_volume_on_d1(self):
+        """1-2% exchange claim on the paper's D1-scale dataset (hulls)."""
+        pts = spatial.make_d1(10_000, seed=0)
+        _, polys, exchanged = ddc.ddc_host(pts, 8, eps=0.03, min_pts=5)
+        assert exchanged / len(pts) < 0.05, exchanged / len(pts)
+
+    def test_d2_structure(self):
+        pts = spatial.make_d2(6_000, seed=1, noise_frac=0.0)
+        glab, polys, _ = ddc.ddc_host(pts, 4, eps=0.035, min_pts=4)
+        n = len(set(glab[glab >= 0]))
+        assert 3 <= n <= 6, n  # big circle, 2 small circles, linked ovals
+
+
+class TestConfig:
+    def test_buffer_bytes_budget(self):
+        cfg = ddc.DDCConfig(max_clusters=32, max_verts=128)
+        # the ClusterSet wire format must stay tiny vs any real shard
+        assert cfg.buffer_bytes() < 64 * 1024 * 2
+
+    def test_merge_radius_grows_with_grid_cell(self):
+        a = ddc.DDCConfig(grid=64).merge_radius
+        b = ddc.DDCConfig(grid=256).merge_radius
+        assert a > b

@@ -1,0 +1,29 @@
+"""Multi-device (8 host CPU devices) integration tests via subprocess —
+the XLA device count must be set before jax initialises, which pytest's
+process already did with 1 device."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = os.path.join(os.path.dirname(__file__), "_dist_script.py")
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_check(name: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(SRC)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, SCRIPT, name],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+    assert proc.returncode == 0, f"{name} failed:\n{proc.stdout}\n{proc.stderr}"
+    return proc.stdout
+
+
+@pytest.mark.parametrize("name", ["ddc", "coll", "train", "moe", "int8", "elastic"])
+def test_distributed(name):
+    out = run_check(name)
+    assert "PASS" in out

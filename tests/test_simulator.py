@@ -1,0 +1,110 @@
+"""Heterogeneous-cluster simulator vs the paper's qualitative claims."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import partitioner, simulate as sim
+
+
+MACH = sim.PAPER_MACHINES
+
+
+class TestPaperScenarios:
+    def test_sync_totals_equal_across_machines(self):
+        """Tables 3-5: in the sync model every machine reports ~the same
+        total (they all block until the global merge)."""
+        r = sim.simulate(MACH, partitioner.scenario_sizes("I"), "sync")
+        assert max(r.total) - min(r.total) < 1e-9
+
+    def test_async_fast_machines_finish_early(self):
+        """Table 3 async: M5 (1666 pts) finished in 618ms while M1 took
+        ~22s — an order of magnitude spread."""
+        r = sim.simulate(MACH, partitioner.scenario_sizes("I"), "async")
+        assert min(r.total) < 0.05 * max(r.total)
+
+    @pytest.mark.parametrize("scen", ["I", "II", "III"])
+    def test_async_beats_sync_under_skew(self, scen):
+        sizes = partitioner.scenario_sizes(scen)
+        s = sim.simulate(MACH, sizes, "sync").makespan
+        a = sim.simulate(MACH, sizes, "async").makespan
+        assert a <= s
+
+    def test_balanced_loads_close_gap_sync_wins_slightly(self):
+        """Table 6: capacity-aware loads ⇒ sync ≈ async with a small edge
+        to sync (async pays readiness-bookkeeping)."""
+        sizes = partitioner.scenario_sizes("IV")
+        s = sim.simulate(MACH, sizes, "sync").makespan
+        a = sim.simulate(MACH, sizes, "async").makespan
+        assert 0.9 < a / s < 1.15
+        assert a >= s * 0.99  # sync not worse by much / async not better by much
+
+    def test_sync_idle_dominates_under_skew(self):
+        sizes = partitioner.scenario_sizes("II")
+        s = sim.simulate(MACH, sizes, "sync")
+        a = sim.simulate(MACH, sizes, "async")
+        assert sum(s.idle) > 5 * sum(a.idle)
+
+
+class TestSpeedup:
+    def test_super_linear_speedup(self):
+        """§5.5: O(n^2) local algorithm ⇒ speedup beyond machine count.
+        Cleanest statement on a homogeneous 8-machine cluster; the paper
+        measures 9x on its heterogeneous 8 (reproduced in
+        benchmarks/speedup.py with their T1 convention)."""
+        n = 10_000
+        homog = [dataclasses.replace(MACH[0], name=f"m{i}") for i in range(8)]
+        t1 = sim.sequential_time(MACH[0], n)
+        tp = sim.simulate(homog, [n // 8] * 8, "async").makespan
+        assert t1 / tp > len(homog), t1 / tp
+
+    def test_capacity_aware_equalizes_phase1(self):
+        n = 8_000
+        speeds = [1.0 / m.step1_coeff for m in MACH]
+        sizes = partitioner.capacity_aware_sizes(n, speeds, 2.0)
+        t1s = [sim.phase1_time(m, s) for m, s in zip(MACH, sizes)]
+        assert max(t1s) / min(t1s) < 1.6  # near-equal finish times
+
+
+class TestScalability:
+    def test_optimal_machine_count_exists(self):
+        """Figs 4-5: total time dips then rises; optimum grows with data."""
+        homo = [dataclasses.replace(MACH[0], name=f"m{i}") for i in range(64)]
+
+        def makespan(n_machines, n_points):
+            ms = homo[:n_machines]
+            sizes = [n_points // n_machines] * n_machines
+            return sim.simulate(ms, sizes, "async").makespan
+
+        counts = [1, 2, 4, 8, 16, 32, 64]
+        t_small = [makespan(c, 10_000) for c in counts]
+        t_big = [makespan(c, 30_000) for c in counts]
+        # decreasing then increasing (an interior optimum)
+        opt_small = counts[int(np.argmin(t_small))]
+        opt_big = counts[int(np.argmin(t_big))]
+        assert 1 < opt_small < 64
+        assert opt_big >= opt_small  # larger dataset ⇒ optimum at more machines
+
+    def test_phase2_grows_with_machines(self):
+        homo = [dataclasses.replace(MACH[0], name=f"m{i}") for i in range(64)]
+        def phase2(c):
+            r = sim.simulate(homo[:c], [10_000 // c] * c, "sync")
+            return r.makespan - max(r.step1)
+        assert phase2(32) > phase2(4)
+
+
+class TestPartitioner:
+    def test_sizes_sum(self):
+        sizes = partitioner.capacity_aware_sizes(1000, [1, 2, 3, 4])
+        assert sizes.sum() == 1000
+
+    def test_spatial_split_compact(self):
+        from repro.data import spatial
+        pts = spatial.make_d1(2000, seed=0)
+        parts = partitioner.split_spatial(pts, 4)
+        # spatially compact shards: per-shard bbox area << full area
+        areas = []
+        for idx in parts:
+            p = pts[idx]
+            areas.append(float(np.ptp(p[:, 0])) * float(np.ptp(p[:, 1])))
+        assert np.mean(areas) < 0.5
