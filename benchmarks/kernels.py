@@ -31,6 +31,17 @@ def run(print_rows=True):
     flops = 2048 * 2048 * 2 * 2
     rows.append(("neighbor_count_2048", us, f"{flops/us/1e3:.2f}GF/s"))
 
+    # Block-sparse variant on clustered points (active-pair list + gather).
+    from repro.core import dbscan as db_mod
+    from repro.data import spatial
+    xs, ms, _ = db_mod.spatial_sort(
+        jnp.asarray(spatial.make_clustered(2048)), mask, 256)
+    pairs = ops.build_tile_pairs(xs, ms, 0.05, bt=256)
+    us = _bench(
+        lambda x: ops.neighbor_count_sparse(x, ms, 0.05, pairs, bt=256), xs)
+    rows.append(("neighbor_count_sparse_2048", us,
+                 f"frac={float(pairs.frac):.3f}"))
+
     q = jnp.asarray(rng.normal(size=(1, 8, 1024, 64)), jnp.bfloat16)
     k = jnp.asarray(rng.normal(size=(1, 2, 1024, 64)), jnp.bfloat16)
     us = _bench(lambda q, k: ops.flash_attention(q, k, k, causal=True), q, k)

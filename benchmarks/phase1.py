@@ -1,0 +1,128 @@
+"""Phase-1 (local DBSCAN) scenario sweep — the perf baseline for the
+block-sparse + pointer-doubling optimisations.
+
+Three spatial layouts × n ∈ {4k, 16k, 64k}:
+
+* ``uniform``   — worst case for pruning (points everywhere);
+* ``clustered`` — the paper's regime: compact blobs, most tile pairs
+  provably farther than ε apart;
+* ``worm``      — a long thin curve: core-graph diameter ~ curve length/ε,
+  the worst case for plain label sweeping.
+
+Per cell we record the **active-tile fraction** (share of tile pairs the
+block-sparse kernels must touch — the MXU-work proxy; wall-clock savings
+land on TPU, the CPU refs here only prove the math) and
+**sweeps-to-convergence** with and without pointer doubling (full
+clustering runs are capped at 16k points — a plain-sweep 64k run would be
+hundreds of O(n²) sweeps on this CPU container).
+
+Writes ``BENCH_phase1.json`` next to the repo root so future PRs have a
+trajectory to regress against.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dbscan as db
+from repro.data import spatial
+from repro.kernels import ops
+
+BT = 512
+EPS = {"uniform": 0.008, "clustered": 0.02, "worm": 0.02}
+MIN_PTS = 5
+SWEEP_NS = (4096, 16384)       # full clustering runs
+PLAIN_NS = (4096,)             # no-doubling runs (diameter-many sweeps)
+FRAC_NS = (4096, 16384, 65536)
+
+
+def make_points(scenario: str, n: int, seed: int = 0) -> np.ndarray:
+    if scenario == "uniform":
+        rng = np.random.default_rng(seed)
+        return rng.uniform(0, 1, (n, 2)).astype(np.float32)
+    if scenario == "clustered":
+        return spatial.make_clustered(n, seed=seed)
+    if scenario == "worm":
+        return spatial.make_worm(n, seed=seed)
+    raise ValueError(scenario)
+
+
+def active_fraction(pts: np.ndarray, eps: float) -> tuple[float, int, int]:
+    """Morton-sort + bbox prune only (cheap at any n) — same preamble the
+    block-sparse dbscan path runs (dbscan.spatial_sort)."""
+    sp, sm, _ = db.spatial_sort(jnp.asarray(pts), jnp.ones(len(pts), bool), BT)
+    pairs = ops.build_tile_pairs(sp, sm, eps, bt=BT)
+    return float(pairs.frac), int(pairs.n_active), sp.shape[0] // BT
+
+
+def run_clustering(pts: np.ndarray, eps: float, doubling: bool):
+    x = jnp.asarray(pts)
+    m = jnp.ones(len(pts), bool)
+    t0 = time.perf_counter()
+    res = db.dbscan(x, m, eps, MIN_PTS, block_sparse="never",
+                    pointer_doubling=doubling)
+    jax.block_until_ready(res.labels)
+    ms = (time.perf_counter() - t0) * 1e3
+    return int(res.n_sweeps), int(res.n_clusters), ms
+
+
+def run(print_rows: bool = True, out_path: str | None = None):
+    rows = []
+    for scenario in ("uniform", "clustered", "worm"):
+        eps = EPS[scenario]
+        for n in FRAC_NS:
+            pts = make_points(scenario, n)
+            frac, n_active, tiles = active_fraction(pts, eps)
+            row = {
+                "scenario": scenario, "n": n, "eps": eps, "bt": BT,
+                "tiles": tiles, "n_active_pairs": n_active,
+                "active_frac": round(frac, 4),
+            }
+            if n in SWEEP_NS:
+                sweeps, clusters, ms = run_clustering(pts, eps, doubling=True)
+                row.update(sweeps_doubling=sweeps, n_clusters=clusters,
+                           ms_doubling=round(ms, 1))
+            if n in PLAIN_NS:
+                sweeps_p, _, ms_p = run_clustering(pts, eps, doubling=False)
+                row.update(sweeps_plain=sweeps_p, ms_plain=round(ms_p, 1))
+                if "sweeps_doubling" in row:  # PLAIN_NS need not ⊆ SWEEP_NS
+                    row["sweep_reduction"] = round(
+                        sweeps_p / max(row["sweeps_doubling"], 1), 2)
+            rows.append(row)
+            if print_rows:
+                print(f"phase1_{scenario}_{n}: frac={frac:.3f} "
+                      + " ".join(f"{k}={row[k]}" for k in
+                                 ("sweeps_plain", "sweeps_doubling",
+                                  "sweep_reduction") if k in row))
+
+    summary = {
+        "worm_sweep_reduction_4096": next(
+            (r["sweep_reduction"] for r in rows
+             if r["scenario"] == "worm" and r["n"] == 4096
+             and "sweep_reduction" in r), None),
+        "clustered_active_frac_65536": next(
+            r["active_frac"] for r in rows
+            if r["scenario"] == "clustered" and r["n"] == 65536),
+        "uniform_active_frac_65536": next(
+            r["active_frac"] for r in rows
+            if r["scenario"] == "uniform" and r["n"] == 65536),
+    }
+    out = {"bt": BT, "min_pts": MIN_PTS, "rows": rows, "summary": summary}
+    if out_path is None:
+        out_path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_phase1.json")
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+    if print_rows:
+        print("summary:", json.dumps(summary))
+        print("wrote", out_path)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

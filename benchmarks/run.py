@@ -41,6 +41,13 @@ def main() -> None:
 
     print()
     print("#" * 72)
+    print("# Phase-1 block-sparse + pointer-doubling sweep (BENCH_phase1.json)")
+    print("#" * 72)
+    from benchmarks import phase1
+    p1_rows = phase1.run()
+
+    print()
+    print("#" * 72)
     print("# Kernel microbenches")
     print("#" * 72)
     k_rows = kernels.run(print_rows=False)
@@ -59,6 +66,12 @@ def main() -> None:
     for r in cv_rows:
         if "hull_frac" in r:
             print(f"{r['name']},0,hull={r['hull_frac']:.3%}|grid={r['grid_frac']:.3%}")
+    for r in p1_rows:
+        derived = f"frac={r['active_frac']:.3f}"
+        if "sweep_reduction" in r:
+            derived += f"|sweepx={r['sweep_reduction']:.1f}"
+        us = f"{r['ms_doubling']*1e3:.0f}" if "ms_doubling" in r else ""
+        print(f"phase1_{r['scenario']}_{r['n']},{us},{derived}")
     for r in k_rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
     for r in md_rows:

@@ -1,0 +1,74 @@
+"""Version-compatibility shims for jax APIs that moved between releases.
+
+The repo targets the modern surface (``jax.shard_map``,
+``jax.sharding.AxisType``, ``jax.make_mesh(..., axis_types=...)``); older
+installs (e.g. 0.4.x) expose the same functionality under
+``jax.experimental.shard_map`` with a ``check_rep`` kwarg and build meshes
+without axis types.  Everything in the repo that touches these APIs routes
+through here so the difference lives in exactly one module.
+"""
+from __future__ import annotations
+
+import jax
+
+# Optional in older jax: mesh axis types (Auto/Explicit/Manual).
+AxisType = getattr(jax.sharding, "AxisType", None)
+
+_HAS_TOPLEVEL_SHARD_MAP = hasattr(jax, "shard_map")
+if not _HAS_TOPLEVEL_SHARD_MAP:
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with graceful fallback to the experimental API.
+
+    ``check_vma`` (new name) and ``check_rep`` (old name) gate the same
+    replication check; callers use the new name only.
+    """
+    if _HAS_TOPLEVEL_SHARD_MAP:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    return _exp_shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)
+
+
+def axis_size(axis: str):
+    """``jax.lax.axis_size`` fallback: psum of a unit constant folds to the
+    (static) mesh axis size on older jax."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    return jax.lax.psum(1, axis)
+
+
+def _auto_axis_types(n: int):
+    if AxisType is None:
+        return None
+    return (AxisType.Auto,) * n
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    shape = tuple(shape)
+    axes = tuple(axes)
+    types = _auto_axis_types(len(axes))
+    if types is not None:
+        try:
+            return jax.make_mesh(shape, axes, axis_types=types)
+        except TypeError:
+            pass  # make_mesh predates the axis_types kwarg
+    return jax.make_mesh(shape, axes)
+
+
+def abstract_mesh(shape, axes):
+    """Device-free ``AbstractMesh`` across both constructor generations."""
+    from jax.sharding import AbstractMesh
+
+    shape = tuple(shape)
+    axes = tuple(axes)
+    types = _auto_axis_types(len(axes))
+    if types is not None:
+        try:
+            return AbstractMesh(shape, axes, axis_types=types)
+        except TypeError:
+            pass  # old signature: a single tuple of (name, size) pairs
+    return AbstractMesh(tuple(zip(axes, shape)))

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.core import dbscan as dbscan_mod
 from repro.core import geometry, kmeans
 from repro.kernels import ops
@@ -61,6 +62,8 @@ class DDCConfig:
     schedule: str = "async"            # "sync" | "async" | "tree"
     tree_degree: int = 2               # D for the paper's Algorithm-2 tree
     merge_refine: str = "grid"         # "grid" | "fps"
+    block_sparse: str = "auto"         # phase-1 spatial pruning (dbscan.py)
+    block_tile: int = 512              # tile size for the block-sparse path
 
     @property
     def merge_radius(self) -> float:
@@ -116,7 +119,10 @@ def local_phase(
     n = points.shape[0]
     c_budget = cfg.max_clusters
     if cfg.local_algo == "dbscan":
-        res = dbscan_mod.dbscan(points, mask, cfg.eps, cfg.min_pts)
+        res = dbscan_mod.dbscan(
+            points, mask, cfg.eps, cfg.min_pts,
+            block_sparse=cfg.block_sparse, bt=cfg.block_tile,
+        )
         dense = dbscan_mod.relabel_dense(res.labels, c_budget)
         n_clusters = res.n_clusters
     elif cfg.local_algo == "kmeans":
@@ -277,7 +283,7 @@ def merge_sync(cs: ClusterSet, cfg: DDCConfig, axis: str):
     Matches the paper's synchronous model.  Returns (global ClusterSet,
     local-slot → global-slot map (C,)).
     """
-    k = jax.lax.axis_size(axis)
+    k = compat.axis_size(axis)
     me = jax.lax.axis_index(axis)
     gathered = jax.lax.all_gather(cs, axis)   # pytree: leaves (K, ...)
 
@@ -312,7 +318,7 @@ def merge_async(cs: ClusterSet, cfg: DDCConfig, axis: str):
     rounds; merge compute overlaps the next round's permute.  Matches the
     paper's asynchronous model (merge as soon as the partner is ready).
     """
-    k = jax.lax.axis_size(axis)
+    k = compat.axis_size(axis)
     assert k & (k - 1) == 0, f"async schedule needs power-of-two shards, got {k}"
     me = jax.lax.axis_index(axis)
     my_map = jnp.arange(cfg.max_clusters, dtype=jnp.int32)
@@ -348,7 +354,7 @@ def merge_tree(cs: ClusterSet, cfg: DDCConfig, axis: str):
     (K-1)·B all-gather and async's log2(K)·B butterfly.  Unlike the
     butterfly, non-leaders idle above their level (the paper's Fig. 1).
     """
-    k = jax.lax.axis_size(axis)
+    k = compat.axis_size(axis)
     d = cfg.tree_degree
     me = jax.lax.axis_index(axis)
     my_map = jnp.where(cs.valid, jnp.arange(cfg.max_clusters, dtype=jnp.int32), -1)
@@ -455,7 +461,7 @@ def make_ddc_fn(mesh, axis: str, cfg: DDCConfig):
 
     @jax.jit
     def run(points, mask):
-        fn = jax.shard_map(
+        fn = compat.shard_map(
             lambda p, m: ddc_shard(p, m, cfg, axis),
             mesh=mesh,
             in_specs=(P(axis, None), P(axis)),

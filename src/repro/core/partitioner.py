@@ -7,7 +7,38 @@ from __future__ import annotations
 
 from typing import Sequence
 
+import jax.numpy as jnp
 import numpy as np
+
+MORTON_BITS = 10
+
+
+def morton_code(points, bounds=None, bits: int = MORTON_BITS):
+    """Interleaved grid-bit (Z-order) code per point — jnp, jit-traceable.
+
+    points: (n, 2) in data units.  ``bounds`` = (x0, y0, x1, y1); when
+    None the points' own bounding box is used (fine for sorting — only
+    the relative order matters).  Nearby codes ⇒ nearby cells, which is
+    what both the spatial shard split and the block-sparse DBSCAN tiling
+    rely on.
+    """
+    pts = jnp.asarray(points, jnp.float32)
+    if bounds is None:
+        lo = jnp.min(pts, axis=0)
+        hi = jnp.max(pts, axis=0)
+    else:
+        lo = jnp.asarray(bounds[:2], jnp.float32)
+        hi = jnp.asarray(bounds[2:], jnp.float32)
+    g = 1 << bits
+    scale = jnp.where(hi > lo, hi - lo, 1.0)
+    cell = ((pts - lo) / scale * g).astype(jnp.int32)
+    cell = jnp.clip(cell, 0, g - 1)
+    ix, iy = cell[:, 0], cell[:, 1]
+    code = jnp.zeros(pts.shape[0], jnp.int32)
+    for b in range(bits):
+        code = code | (((ix >> b) & 1) << (2 * b + 1))
+        code = code | (((iy >> b) & 1) << (2 * b))
+    return code
 
 
 def split_block(n: int, k: int) -> list[np.ndarray]:
@@ -23,13 +54,7 @@ def split_random(n: int, k: int, seed: int = 0) -> list[np.ndarray]:
 def split_spatial(points: np.ndarray, k: int) -> list[np.ndarray]:
     """Morton-ish spatial split: sort by interleaved grid bits so shards
     are spatially compact (fewer cross-shard clusters to merge)."""
-    g = 1 << 10
-    ix = np.clip((points[:, 0] * g).astype(np.int64), 0, g - 1)
-    iy = np.clip((points[:, 1] * g).astype(np.int64), 0, g - 1)
-    code = np.zeros(len(points), np.int64)
-    for b in range(10):
-        code |= ((ix >> b) & 1) << (2 * b + 1)
-        code |= ((iy >> b) & 1) << (2 * b)
+    code = np.asarray(morton_code(points, bounds=(0.0, 0.0, 1.0, 1.0)))
     order = np.argsort(code, kind="stable")
     return np.array_split(order, k)
 

@@ -73,6 +73,26 @@ def make_d2(n: int = 30_000, seed: int = 1, noise_frac: float = 0.04) -> np.ndar
     return np.clip(pts, 0.0, 1.0).astype(np.float32)
 
 
+def make_clustered(n: int, k: int = 8, seed: int = 0,
+                   spread: float = 0.02) -> np.ndarray:
+    """k Gaussian blobs at uniform-random centres — the benchmark layout
+    where most tile pairs are prunable (block-sparse phase 1)."""
+    rng = np.random.default_rng(seed)
+    centers = rng.uniform(0.1, 0.9, (k, 2))
+    pts = centers[rng.integers(0, k, n)] + rng.normal(0, spread, (n, 2))
+    return pts.astype(np.float32)
+
+
+def make_worm(n: int, seed: int = 1, waves: int = 3, amp: float = 0.2,
+              width: float = 0.004) -> np.ndarray:
+    """Long thin noisy sine curve: core-graph diameter ~ curve length/ε —
+    the worst case for plain label sweeping (pointer-doubling benchmark)."""
+    rng = np.random.default_rng(seed)
+    t = np.linspace(0, 1, n)
+    pts = np.stack([t, 0.5 + amp * np.sin(2 * waves * np.pi * t)], -1)
+    return (pts + rng.normal(0, width, (n, 2))).astype(np.float32)
+
+
 def make_blobs(
     n: int, k: int, seed: int = 0, spread: float = 0.02, margin: float = 0.12
 ) -> tuple[np.ndarray, np.ndarray]:

@@ -10,6 +10,8 @@ override dispatch (tests use "interpret").
 """
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax
 import jax.numpy as jnp
 
@@ -33,6 +35,13 @@ def _use_pallas() -> bool:
 
 def _interpret() -> bool:
     return FORCE == "interpret" or jax.default_backend() != "tpu"
+
+
+def use_pallas_backend() -> bool:
+    """Public probe: do ops dispatch to Pallas kernels right now?  Callers
+    (dbscan's block-sparse "auto" mode) use this to skip gather-based
+    layouts whose wins are kernel-side only."""
+    return _use_pallas()
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int):
@@ -69,10 +78,7 @@ def neighbor_count(x: jax.Array, mask: jax.Array, eps, *, bn: int = 512, bm: int
 
 def min_label_sweep(x, mask, labels, core, eps, *, bn: int = 512, bm: int = 512) -> jax.Array:
     if not _use_pallas():
-        d2 = ref.pairwise_dist_sq(x, x)
-        ok = (d2 <= jnp.asarray(eps, jnp.float32) ** 2) & mask[None, :] & mask[:, None] & core[None, :]
-        labs = jnp.where(ok, labels[None, :], 2**30)
-        return jnp.min(labs, axis=1).astype(jnp.int32)
+        return ref.min_label_sweep(x, mask, labels, core, eps)
     xp, n = _pad_to(x, 0, bn)
     mp, _ = _pad_to(mask, 0, bn)
     lp, _ = _pad_to(labels, 0, bn)
@@ -80,6 +86,99 @@ def min_label_sweep(x, mask, labels, core, eps, *, bn: int = 512, bm: int = 512)
     out = _pd.min_label_sweep(xp, mp, lp, cp, eps, bn=min(bn, xp.shape[0]),
                               bm=min(bm, xp.shape[0]), interpret=_interpret())
     return out[:n]
+
+
+# -- block-sparse spatial pruning (DDC phase 1) ------------------------------
+
+
+class TilePairs(NamedTuple):
+    """Static-shape active tile-pair list for the block-sparse kernels.
+
+    rows/cols/flags: (T*T,) int32 — active pairs first, in row-major
+    order (so the kernels' output blocks see one contiguous run per row
+    tile), tail-padded by repeating the last active pair with flags=0.
+    flags bit0 = pair is real, bit1 = first pair of its row tile.
+    n_active / frac are traced scalars (the pair *values* are data
+    dependent; only shapes are static).
+    """
+
+    rows: jax.Array     # (P,) int32 row-tile index
+    cols: jax.Array     # (P,) int32 col-tile index
+    flags: jax.Array    # (P,) int32 PAIR_VALID | PAIR_FIRST bits
+    n_active: jax.Array  # () int32 — number of real pairs
+    frac: jax.Array     # () f32 — n_active / T², the active-tile fraction
+
+
+def build_tile_pairs(x: jax.Array, mask: jax.Array, eps, *, bt: int = 512) -> TilePairs:
+    """Bounding-box pruning over ``bt``-point tiles of spatially sorted x.
+
+    A tile pair (i, j) is *active* when the min distance between the two
+    tiles' bounding boxes is <= eps — every within-eps point pair lives in
+    an active tile pair, so skipping inactive pairs is exact, not an
+    approximation.  Diagonal pairs are always active, which also
+    guarantees every row tile appears in the list (the kernels rely on
+    that to initialise all output blocks).  jit-traceable.
+    """
+    n, d = x.shape
+    assert n % bt == 0, (n, bt)
+    t = n // bt
+    big = jnp.float32(3.4e38)
+    xb = x.astype(jnp.float32).reshape(t, bt, d)
+    mb = mask.reshape(t, bt)
+    lo = jnp.min(jnp.where(mb[..., None], xb, big), axis=1)    # (T, d)
+    hi = jnp.max(jnp.where(mb[..., None], xb, -big), axis=1)   # (T, d)
+    has_pts = jnp.any(mb, axis=1)
+    # Per-dim gap between boxes i and j (0 when they overlap on that dim).
+    gap = jnp.maximum(lo[:, None, :] - hi[None, :, :],
+                      lo[None, :, :] - hi[:, None, :])
+    gap = jnp.maximum(gap, 0.0)
+    gap_d2 = jnp.sum(gap * gap, axis=-1)                       # (T, T)
+    eps_sq = jnp.asarray(eps, jnp.float32) ** 2
+    active = (gap_d2 <= eps_sq) & has_pts[:, None] & has_pts[None, :]
+    active = active | jnp.eye(t, dtype=bool)
+    flat = active.reshape(t * t)
+    n_active = jnp.sum(flat.astype(jnp.int32))
+    # Active flat indices in row-major order; pad by repeating the last
+    # active pair (same row tile -> no spurious output-block switch).
+    (idx,) = jnp.nonzero(flat, size=t * t, fill_value=0)
+    p = t * t
+    is_real = jnp.arange(p, dtype=jnp.int32) < n_active
+    last = idx[jnp.maximum(n_active - 1, 0)]
+    idx = jnp.where(is_real, idx, last)
+    rows = (idx // t).astype(jnp.int32)
+    cols = (idx % t).astype(jnp.int32)
+    first = is_real & jnp.concatenate(
+        [jnp.asarray([True]), rows[1:] != rows[:-1]]
+    )
+    flags = (is_real.astype(jnp.int32) * _pd.PAIR_VALID
+             | first.astype(jnp.int32) * _pd.PAIR_FIRST)
+    frac = n_active.astype(jnp.float32) / float(t * t)
+    return TilePairs(rows, cols, flags, n_active, frac)
+
+
+def neighbor_count_sparse(x, mask, eps, pairs: TilePairs, *, bt: int = 512) -> jax.Array:
+    """Block-sparse ``neighbor_count`` over spatially sorted points.
+
+    x must already be padded to a multiple of ``bt`` (the block-sparse
+    dbscan path owns the sort+pad so the pair list and data agree)."""
+    if not _use_pallas():
+        return ref.neighbor_count_sparse(x, mask, eps, pairs.rows,
+                                         pairs.cols, pairs.flags, bt)
+    return _pd.neighbor_count_sparse(x, mask, eps, pairs.rows, pairs.cols,
+                                     pairs.flags, bt=bt,
+                                     interpret=_interpret())
+
+
+def min_label_sweep_sparse(x, mask, labels, core, eps, pairs: TilePairs, *,
+                           bt: int = 512) -> jax.Array:
+    """Block-sparse ``min_label_sweep`` over spatially sorted points."""
+    if not _use_pallas():
+        return ref.min_label_sweep_sparse(x, mask, labels, core, eps,
+                                          pairs.rows, pairs.cols,
+                                          pairs.flags, bt)
+    return _pd.min_label_sweep_sparse(x, mask, labels, core, eps, pairs.rows,
+                                      pairs.cols, pairs.flags, bt=bt,
+                                      interpret=_interpret())
 
 
 # -- attention ---------------------------------------------------------------

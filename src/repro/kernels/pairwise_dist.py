@@ -21,9 +21,16 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 DEF_BN = 512
 DEF_BM = 512
+
+# Active-pair flag bits (see ops.build_tile_pairs): bit0 = pair is real
+# (not tail padding), bit1 = first pair of its row tile (output block must
+# be initialised before accumulating).
+PAIR_VALID = 1
+PAIR_FIRST = 2
 
 
 def _dist_kernel(x_ref, y_ref, o_ref):
@@ -171,3 +178,148 @@ def min_label_sweep(
     )(eps_sq, x, x, mask.astype(jnp.int32), mask.astype(jnp.int32),
       labels.astype(jnp.int32), core.astype(jnp.int32))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Block-sparse (gathered-grid) variants — DDC phase 1 on spatially sorted
+# points.  The grid iterates an *active-pair list* (built by
+# ops.build_tile_pairs from per-tile bounding boxes) instead of the full
+# (T, T) tile product: tile pairs provably farther than eps apart are never
+# fetched or computed.  Scalar-prefetched row/col indices drive the block
+# gather; pairs arrive sorted by row tile so each output block is resident
+# for exactly one contiguous run of grid steps (init on PAIR_FIRST,
+# accumulate while PAIR_VALID, write-back when the row index advances).
+# ---------------------------------------------------------------------------
+
+
+def _count_sparse_kernel(rows_ref, cols_ref, flags_ref, eps_sq_ref,
+                         x_ref, y_ref, xm_ref, ym_ref, o_ref):
+    p = pl.program_id(0)
+    flags = flags_ref[p]
+
+    @pl.when((flags & PAIR_FIRST) != 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when((flags & PAIR_VALID) != 0)
+    def _acc():
+        x = x_ref[...].astype(jnp.float32)
+        y = y_ref[...].astype(jnp.float32)
+        xx = jnp.sum(x * x, axis=-1)[:, None]
+        yy = jnp.sum(y * y, axis=-1)[None, :]
+        d2 = xx + yy - 2.0 * jax.lax.dot_general(
+            x, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        within = (
+            (d2 <= eps_sq_ref[0])
+            & (xm_ref[...] > 0)[:, None]
+            & (ym_ref[...] > 0)[None, :]
+        )
+        o_ref[...] += jnp.sum(within.astype(jnp.int32), axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def neighbor_count_sparse(
+    x: jax.Array, mask: jax.Array, eps: float | jax.Array,
+    rows: jax.Array, cols: jax.Array, flags: jax.Array, *,
+    bt: int = DEF_BN, interpret: bool = False,
+) -> jax.Array:
+    """Masked ε-neighbour count over an active tile-pair list.
+
+    x: (n, d) spatially sorted, n a multiple of ``bt``; rows/cols/flags:
+    (P,) int32 pair list sorted by row (every row tile appears — the
+    diagonal pair is always active).  Matches the dense ``neighbor_count``
+    bit-exactly when the pair list covers every within-eps tile pair.
+    """
+    n, d = x.shape
+    assert n % bt == 0, (n, bt)
+    n_pairs = rows.shape[0]
+    eps_sq = jnp.asarray([jnp.asarray(eps, jnp.float32) ** 2])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n_pairs,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda p, r, c, f: (0,)),
+            pl.BlockSpec((bt, d), lambda p, r, c, f: (r[p], 0)),
+            pl.BlockSpec((bt, d), lambda p, r, c, f: (c[p], 0)),
+            pl.BlockSpec((bt,), lambda p, r, c, f: (r[p],)),
+            pl.BlockSpec((bt,), lambda p, r, c, f: (c[p],)),
+        ],
+        out_specs=pl.BlockSpec((bt,), lambda p, r, c, f: (r[p],)),
+    )
+    mask_i = mask.astype(jnp.int32)
+    return pl.pallas_call(
+        _count_sparse_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(rows, cols, flags, eps_sq, x, x, mask_i, mask_i)
+
+
+def _min_label_sparse_kernel(rows_ref, cols_ref, flags_ref, eps_sq_ref,
+                             x_ref, y_ref, xm_ref, ym_ref, lab_ref, core_ref,
+                             o_ref):
+    p = pl.program_id(0)
+    flags = flags_ref[p]
+
+    @pl.when((flags & PAIR_FIRST) != 0)
+    def _init():
+        o_ref[...] = jnp.full(o_ref.shape, 2**30, jnp.int32)
+
+    @pl.when((flags & PAIR_VALID) != 0)
+    def _acc():
+        x = x_ref[...].astype(jnp.float32)
+        y = y_ref[...].astype(jnp.float32)
+        xx = jnp.sum(x * x, axis=-1)[:, None]
+        yy = jnp.sum(y * y, axis=-1)[None, :]
+        d2 = xx + yy - 2.0 * jax.lax.dot_general(
+            x, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        ok = (
+            (d2 <= eps_sq_ref[0])
+            & (xm_ref[...] > 0)[:, None]
+            & (ym_ref[...] > 0)[None, :]
+            & (core_ref[...] > 0)[None, :]
+        )
+        labs = jnp.where(ok, lab_ref[...][None, :], jnp.int32(2**30))
+        o_ref[...] = jnp.minimum(o_ref[...], jnp.min(labs, axis=1))
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def min_label_sweep_sparse(
+    x: jax.Array, mask: jax.Array, labels: jax.Array, core: jax.Array,
+    eps: float | jax.Array, rows: jax.Array, cols: jax.Array,
+    flags: jax.Array, *, bt: int = DEF_BN, interpret: bool = False,
+) -> jax.Array:
+    """One min-label propagation sweep over an active tile-pair list.
+
+    Same semantics as the dense ``min_label_sweep`` (2**30 where a point
+    has no in-range core neighbour) restricted to listed pairs — identical
+    output when the list covers every within-eps tile pair.
+    """
+    n, d = x.shape
+    assert n % bt == 0, (n, bt)
+    n_pairs = rows.shape[0]
+    eps_sq = jnp.asarray([jnp.asarray(eps, jnp.float32) ** 2])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n_pairs,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda p, r, c, f: (0,)),
+            pl.BlockSpec((bt, d), lambda p, r, c, f: (r[p], 0)),
+            pl.BlockSpec((bt, d), lambda p, r, c, f: (c[p], 0)),
+            pl.BlockSpec((bt,), lambda p, r, c, f: (r[p],)),
+            pl.BlockSpec((bt,), lambda p, r, c, f: (c[p],)),
+            pl.BlockSpec((bt,), lambda p, r, c, f: (c[p],)),
+            pl.BlockSpec((bt,), lambda p, r, c, f: (c[p],)),
+        ],
+        out_specs=pl.BlockSpec((bt,), lambda p, r, c, f: (r[p],)),
+    )
+    return pl.pallas_call(
+        _min_label_sparse_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(rows, cols, flags, eps_sq, x, x, mask.astype(jnp.int32),
+      mask.astype(jnp.int32), labels.astype(jnp.int32),
+      core.astype(jnp.int32))

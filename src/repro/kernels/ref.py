@@ -35,6 +35,82 @@ def neighbor_count(x: Array, mask: Array, eps: float) -> Array:
     return jnp.sum(adj, axis=1).astype(jnp.int32)
 
 
+def min_label_sweep(x: Array, mask: Array, labels: Array, core: Array,
+                    eps) -> Array:
+    """One DBSCAN min-label sweep: per point, the min label over masked
+    core points within eps (2**30 where none)."""
+    d2 = pairwise_dist_sq(x, x)
+    ok = (
+        (d2 <= jnp.asarray(eps, jnp.float32) ** 2)
+        & mask[:, None] & mask[None, :] & core[None, :]
+    )
+    labs = jnp.where(ok, labels[None, :].astype(jnp.int32), jnp.int32(2**30))
+    return jnp.min(labs, axis=1)
+
+
+# -- block-sparse variants (active tile-pair lists; see ops.build_tile_pairs)
+
+
+def _pair_scan(x: Array, mask: Array, rows: Array, cols: Array,
+               flags: Array, bt: int, init, contrib, combine):
+    """Shared skeleton: sequentially fold listed (row, col) tile pairs into
+    a per-row-tile accumulator — O(P · bt²) work and O(bt²) memory, the
+    jnp mirror of the gathered-grid Pallas kernels."""
+    n, d = x.shape
+    t = n // bt
+    xb = x.reshape(t, bt, d)
+    mb = mask.reshape(t, bt)
+
+    def step(acc, pair):
+        r, c, f = pair
+        valid = (f & 1) != 0
+        out = contrib(jnp.take(xb, r, axis=0), jnp.take(xb, c, axis=0),
+                      jnp.take(mb, r, axis=0), jnp.take(mb, c, axis=0),
+                      r, c, valid)
+        return combine(acc, r, out), None
+
+    acc0 = jnp.full((t, bt), init, jnp.int32)
+    acc, _ = jax.lax.scan(step, acc0, (rows, cols, flags))
+    return acc.reshape(n)
+
+
+def neighbor_count_sparse(x: Array, mask: Array, eps,
+                          rows: Array, cols: Array, flags: Array,
+                          bt: int) -> Array:
+    """``neighbor_count`` restricted to listed tile pairs — bit-identical
+    to the dense path when the list covers every within-eps tile pair."""
+    eps_sq = jnp.asarray(eps, jnp.float32) ** 2
+
+    def contrib(xt, yt, xm, ym, r, c, valid):
+        d2 = pairwise_dist_sq(xt, yt)
+        within = (d2 <= eps_sq) & xm[:, None] & ym[None, :] & valid
+        return jnp.sum(within.astype(jnp.int32), axis=1)
+
+    return _pair_scan(x, mask, rows, cols, flags, bt, 0, contrib,
+                      lambda acc, r, out: acc.at[r].add(out))
+
+
+def min_label_sweep_sparse(x: Array, mask: Array, labels: Array, core: Array,
+                           eps, rows: Array, cols: Array, flags: Array,
+                           bt: int) -> Array:
+    """``min_label_sweep`` restricted to listed tile pairs."""
+    n = x.shape[0]
+    t = n // bt
+    eps_sq = jnp.asarray(eps, jnp.float32) ** 2
+    lb = labels.astype(jnp.int32).reshape(t, bt)
+    cb = core.reshape(t, bt)
+
+    def contrib(xt, yt, xm, ym, r, c, valid):
+        d2 = pairwise_dist_sq(xt, yt)
+        ok = ((d2 <= eps_sq) & xm[:, None] & ym[None, :]
+              & jnp.take(cb, c, axis=0)[None, :] & valid)
+        labs = jnp.where(ok, jnp.take(lb, c, axis=0)[None, :], jnp.int32(2**30))
+        return jnp.min(labs, axis=1)
+
+    return _pair_scan(x, mask, rows, cols, flags, bt, 2**30, contrib,
+                      lambda acc, r, out: acc.at[r].min(out))
+
+
 def flash_attention(
     q: Array, k: Array, v: Array, *, causal: bool = True, scale: float | None = None,
     window: int | None = None,

@@ -253,13 +253,27 @@ def _fusion_input_bytes(comp: Computation, operand_types: list[str]) -> float:
     return total
 
 
-def _comp_has_scope(comps, name, cache) -> bool:
+_CALLEE_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+
+
+def _comp_has_scope(comps, name, cache, _stack=()) -> bool:
+    """A computation is scoped when any instruction carries the
+    ``vmem_kernel`` metadata, directly or via a computation it calls —
+    some backends (CPU parallel codegen) wrap scoped ops in metadata-free
+    ``call``/``to_apply`` shells, so the scope must propagate through the
+    call graph."""
     if name in cache:
         return cache[name]
     c = comps.get(name)
-    val = bool(c) and any(
-        "vmem_kernel" in i.rest for i in c.instrs if i.op != "parameter"
-    )
+    if c is None or name in _stack:
+        return False
+    val = any("vmem_kernel" in i.rest for i in c.instrs if i.op != "parameter")
+    if not val:
+        for i in c.instrs:
+            if any(_comp_has_scope(comps, t, cache, _stack + (name,))
+                   for t in _CALLEE_RE.findall(i.rest)):
+                val = True
+                break
     cache[name] = val
     return val
 
@@ -282,9 +296,9 @@ def analyze_text(text: str) -> dict:
         for ins in c.instrs:
             if "vmem_kernel" in ins.rest:
                 scoped_names.add(ins.name)
-            elif ins.op == "fusion":
-                m = re.search(r"calls=%?([\w.\-]+)", ins.rest)
-                if m and _comp_has_scope(comps, m.group(1), scope_cache):
+            elif ins.op in ("fusion", "call", "reduce", "reduce-window"):
+                if any(_comp_has_scope(comps, t, scope_cache)
+                       for t in _CALLEE_RE.findall(ins.rest)):
                     scoped_names.add(ins.name)
 
     flops = 0.0

@@ -9,21 +9,21 @@ multi-pod dry-run exercises).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(tuple(shape), tuple(axes))
 
 
 def make_host_mesh(n: int | None = None, axis: str = "data"):
     """Small CPU mesh over however many host devices exist (tests)."""
     n = n or len(jax.devices())
-    return jax.make_mesh((n,), (axis,), axis_types=(AxisType.Auto,))
+    return compat.make_mesh((n,), (axis,))

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.kernels import ops
 from repro.parallel import api as par
 
@@ -599,7 +600,7 @@ def moe_apply(cfg, p: Params, x):
                 parts = jax.tree.map(lambda a_: jax.lax.psum(a_, psum_axes), parts)
             return y, parts
 
-        y, parts = jax.shard_map(
+        y, parts = compat.shard_map(
             island,
             mesh=c.mesh,
             in_specs=(
@@ -627,7 +628,7 @@ def moe_apply(cfg, p: Params, x):
                 parts = jax.tree.map(lambda a_: jax.lax.psum(a_, psum_axes), parts)
             return y, parts
 
-        y, parts = jax.shard_map(
+        y, parts = compat.shard_map(
             island,
             mesh=c.mesh,
             in_specs=(

@@ -20,6 +20,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 
 def quantize_int8(x: jax.Array):
     absmax = jnp.max(jnp.abs(x)) + 1e-12
@@ -115,7 +117,7 @@ def shard_map_all_reduce(grads, mesh, axes=("pod", "data")):
         return (qsum.astype(jnp.float32) * s / n).astype(g.dtype)
 
     def one(g):
-        return jax.shard_map(
+        return compat.shard_map(
             island, mesh=mesh,
             in_specs=P(*[None] * g.ndim), out_specs=P(*[None] * g.ndim),
             check_vma=False,

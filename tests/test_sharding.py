@@ -2,18 +2,17 @@
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import AbstractMesh, AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.parallel import api as par
 from repro.parallel import sharding as sr
 
 
 def mesh2(multi_pod=False):
     if multi_pod:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"),
-                            axis_types=(AxisType.Auto,) * 3)
-    return AbstractMesh((16, 16), ("data", "model"),
-                        axis_types=(AxisType.Auto,) * 2)
+        return compat.abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+    return compat.abstract_mesh((16, 16), ("data", "model"))
 
 
 def ctx(fsdp=False, multi_pod=False):
