@@ -1,0 +1,143 @@
+"""Schema checker for the BENCH_*.json artifacts (CI benchmark-smoke gate).
+
+No external schema library: the checks are hand-rolled assertions over
+structure, types, and cross-field invariants.  Exit code 0 iff every
+file passes.
+
+    python benchmarks/check_bench.py BENCH_phase1.json BENCH_phase2.json
+
+Files are recognised by shape: phase-1 artifacts carry a top-level
+``bt``; phase-2 artifacts carry ``schema: "phase2-bench/v1"``.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+class SchemaError(AssertionError):
+    pass
+
+
+def _require(cond: bool, msg: str):
+    if not cond:
+        raise SchemaError(msg)
+
+
+def _typed(row: dict, key: str, types, ctx: str):
+    _require(key in row, f"{ctx}: missing key {key!r}")
+    _require(isinstance(row[key], types),
+             f"{ctx}: {key!r} has type {type(row[key]).__name__}, "
+             f"expected {types}")
+    return row[key]
+
+
+def check_phase1(doc: dict):
+    _typed(doc, "bt", int, "phase1")
+    _typed(doc, "min_pts", int, "phase1")
+    rows = _typed(doc, "rows", list, "phase1")
+    _require(len(rows) > 0, "phase1: rows is empty")
+    smoke = bool(doc.get("smoke", False))
+    for i, row in enumerate(rows):
+        ctx = f"phase1.rows[{i}]"
+        _require(_typed(row, "scenario", str, ctx) in
+                 ("uniform", "clustered", "worm"), f"{ctx}: bad scenario")
+        _require(_typed(row, "n", int, ctx) > 0, f"{ctx}: n <= 0")
+        _require(_typed(row, "eps", (int, float), ctx) > 0, f"{ctx}: eps <= 0")
+        frac = _typed(row, "active_frac", (int, float), ctx)
+        _require(0.0 <= frac <= 1.0, f"{ctx}: active_frac {frac} not in [0,1]")
+        _require(_typed(row, "n_active_pairs", int, ctx)
+                 >= _typed(row, "tiles", int, ctx),
+                 f"{ctx}: fewer active pairs than (always-active) diagonal")
+        if "sweeps_doubling" in row:
+            _require(row["sweeps_doubling"] >= 1, f"{ctx}: sweeps < 1")
+        if "sweep_reduction" in row:
+            _require(row["sweep_reduction"] >= 1.0,
+                     f"{ctx}: pointer doubling increased sweeps")
+    summary = _typed(doc, "summary", dict, "phase1")
+    if not smoke:
+        for key in ("clustered_active_frac_65536", "uniform_active_frac_65536"):
+            _require(summary.get(key) is not None,
+                     f"phase1.summary: {key} missing (non-smoke run)")
+
+
+def check_phase2(doc: dict):
+    _require(doc.get("schema") == "phase2-bench/v1",
+             f"phase2: bad schema tag {doc.get('schema')!r}")
+    smoke = bool(doc.get("smoke", False))
+    rows = _typed(doc, "rows", list, "phase2")
+    _require(len(rows) > 0, "phase2: rows is empty")
+    layouts = _typed(doc, "layouts", dict, "phase2")
+    _require(len(layouts) >= 3, "phase2: fewer than 3 layouts")
+    seen = set()
+    for i, row in enumerate(rows):
+        ctx = f"phase2.rows[{i}]"
+        layout = _typed(row, "layout", str, ctx)
+        _require(layout in layouts, f"{ctx}: unknown layout {layout!r}")
+        sched = _typed(row, "schedule", str, ctx)
+        _require(sched in ("sync", "async", "tree"), f"{ctx}: bad schedule")
+        k = _typed(row, "shards", int, ctx)
+        _require(k >= 2, f"{ctx}: shards < 2")
+        _require(_typed(row, "wall_ms", (int, float), ctx) > 0,
+                 f"{ctx}: wall_ms <= 0")
+        _require(_typed(row, "merge_steps", int, ctx) >= 1,
+                 f"{ctx}: merge_steps < 1")
+        _require(_typed(row, "bytes_exchanged", int, ctx) > 0,
+                 f"{ctx}: bytes_exchanged <= 0")
+        _require(_typed(row, "matches_host", bool, ctx) is True,
+                 f"{ctx}: distributed clustering diverged from ddc_host")
+        _require(row["bytes_exchanged"] % _typed(row, "buffer_bytes", int, ctx)
+                 == 0,
+                 f"{ctx}: bytes_exchanged not a multiple of the wire buffer")
+        seen.add((layout, sched, k))
+    for layout in layouts:
+        for sched in ("sync", "async", "tree"):
+            ks = {k for (lo, s, k) in seen if lo == layout and s == sched}
+            _require(len(ks) > 0, f"phase2: no rows for {layout}/{sched}")
+            if not smoke:
+                _require(max(ks) >= 16,
+                         f"phase2: {layout}/{sched} never reaches 16 shards")
+    summary = _typed(doc, "summary", dict, "phase2")
+    _require(summary.get("all_match_host") is True,
+             "phase2.summary: all_match_host is not true")
+    # Schedule comm-volume ordering must hold wherever both are present:
+    # the butterfly moves strictly fewer bytes than the all-gather.
+    for layout in layouts:
+        for k in {k for (_, _, k) in seen}:
+            by = {s: r["bytes_exchanged"] for r in rows for s in [r["schedule"]]
+                  if r["layout"] == layout and r["shards"] == k}
+            if "sync" in by and "async" in by and k > 2:
+                _require(by["async"] < by["sync"],
+                         f"phase2: async moved >= bytes than sync at "
+                         f"{layout}/k={k}")
+
+
+def check_file(path: str):
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") == "phase2-bench/v1":
+        check_phase2(doc)
+        return "phase2"
+    if "bt" in doc:
+        check_phase1(doc)
+        return "phase1"
+    raise SchemaError(f"{path}: unrecognised benchmark artifact")
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: check_bench.py BENCH_*.json [...]", file=sys.stderr)
+        return 2
+    status = 0
+    for path in argv:
+        try:
+            kind = check_file(path)
+            print(f"OK {path} ({kind})")
+        except (SchemaError, OSError, json.JSONDecodeError) as e:
+            print(f"FAIL {path}: {e}", file=sys.stderr)
+            status = 1
+    return status
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

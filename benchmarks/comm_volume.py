@@ -4,7 +4,6 @@ both contour extractors, plus the distributed wire-format accounting
 (sync all-gather vs async butterfly)."""
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import dbscan as db
 from repro.core import ddc, geometry

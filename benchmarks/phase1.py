@@ -21,6 +21,7 @@ trajectory to regress against.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -39,6 +40,10 @@ MIN_PTS = 5
 SWEEP_NS = (4096, 16384)       # full clustering runs
 PLAIN_NS = (4096,)             # no-doubling runs (diameter-many sweeps)
 FRAC_NS = (4096, 16384, 65536)
+# CI smoke subset: one size per measurement family.
+SMOKE_SWEEP_NS = (4096,)
+SMOKE_PLAIN_NS = (4096,)
+SMOKE_FRAC_NS = (4096,)
 
 
 def make_points(scenario: str, n: int, seed: int = 0) -> np.ndarray:
@@ -71,11 +76,15 @@ def run_clustering(pts: np.ndarray, eps: float, doubling: bool):
     return int(res.n_sweeps), int(res.n_clusters), ms
 
 
-def run(print_rows: bool = True, out_path: str | None = None):
+def run(print_rows: bool = True, out_path: str | None = None,
+        smoke: bool = False):
+    frac_ns = SMOKE_FRAC_NS if smoke else FRAC_NS
+    sweep_ns = SMOKE_SWEEP_NS if smoke else SWEEP_NS
+    plain_ns = SMOKE_PLAIN_NS if smoke else PLAIN_NS
     rows = []
     for scenario in ("uniform", "clustered", "worm"):
         eps = EPS[scenario]
-        for n in FRAC_NS:
+        for n in frac_ns:
             pts = make_points(scenario, n)
             frac, n_active, tiles = active_fraction(pts, eps)
             row = {
@@ -83,11 +92,11 @@ def run(print_rows: bool = True, out_path: str | None = None):
                 "tiles": tiles, "n_active_pairs": n_active,
                 "active_frac": round(frac, 4),
             }
-            if n in SWEEP_NS:
+            if n in sweep_ns:
                 sweeps, clusters, ms = run_clustering(pts, eps, doubling=True)
                 row.update(sweeps_doubling=sweeps, n_clusters=clusters,
                            ms_doubling=round(ms, 1))
-            if n in PLAIN_NS:
+            if n in plain_ns:
                 sweeps_p, _, ms_p = run_clustering(pts, eps, doubling=False)
                 row.update(sweeps_plain=sweeps_p, ms_plain=round(ms_p, 1))
                 if "sweeps_doubling" in row:  # PLAIN_NS need not ⊆ SWEEP_NS
@@ -100,19 +109,22 @@ def run(print_rows: bool = True, out_path: str | None = None):
                                  ("sweeps_plain", "sweeps_doubling",
                                   "sweep_reduction") if k in row))
 
+    # Summary entries are None when their size wasn't in this run's sweep
+    # (smoke mode); check_bench.py only requires them on full runs.
     summary = {
         "worm_sweep_reduction_4096": next(
             (r["sweep_reduction"] for r in rows
              if r["scenario"] == "worm" and r["n"] == 4096
              and "sweep_reduction" in r), None),
         "clustered_active_frac_65536": next(
-            r["active_frac"] for r in rows
-            if r["scenario"] == "clustered" and r["n"] == 65536),
+            (r["active_frac"] for r in rows
+             if r["scenario"] == "clustered" and r["n"] == 65536), None),
         "uniform_active_frac_65536": next(
-            r["active_frac"] for r in rows
-            if r["scenario"] == "uniform" and r["n"] == 65536),
+            (r["active_frac"] for r in rows
+             if r["scenario"] == "uniform" and r["n"] == 65536), None),
     }
-    out = {"bt": BT, "min_pts": MIN_PTS, "rows": rows, "summary": summary}
+    out = {"bt": BT, "min_pts": MIN_PTS, "smoke": smoke, "rows": rows,
+           "summary": summary}
     if out_path is None:
         out_path = os.path.join(os.path.dirname(os.path.dirname(
             os.path.abspath(__file__))), "BENCH_phase1.json")
@@ -125,4 +137,9 @@ def run(print_rows: bool = True, out_path: str | None = None):
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI subset: n=4096 only")
+    ap.add_argument("--out", default=None, help="output JSON path")
+    args = ap.parse_args()
+    run(out_path=args.out, smoke=args.smoke)

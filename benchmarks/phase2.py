@@ -1,0 +1,182 @@
+"""Phase-2 (contour aggregation) scenario sweep — the perf + comm-volume
+baseline for the batched merge engine.
+
+Four spatial layouts (rings with a nested disc, linked ovals, worm,
+noise-heavy) × shard counts 2–32 × all three merge schedules
+(sync all-gather, async butterfly, tree).  Per cell we record:
+
+* **wall-clock** of the full distributed DDC call (CPU host devices —
+  a proxy ordering, like BENCH_phase1.json: the MXU/ICI wins land on
+  TPU, the CPU refs here prove the math and the schedule shapes);
+* **merge-step count** and **bytes-exchanged** from the trace-time
+  ``CommMeter`` (exact: permutation lists and buffer shapes are static);
+* **matches_host** — the distributed labels must reproduce ``ddc_host``'s
+  global clustering *bit-exactly* (identical partition of the points,
+  identical noise set) on every cell.  The sweep hard-fails otherwise.
+
+Writes ``BENCH_phase2.json`` next to the repo root so future PRs have a
+trajectory to regress against.  ``--smoke`` runs a tiny subset for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _parse_args(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny CI subset: 2/4 shards only")
+    p.add_argument("--out", default=None, help="output JSON path")
+    return p.parse_args(argv)
+
+
+_ARGS = _parse_args()
+# Smoke keeps the full layouts (their eps/min_pts are tuned to the point
+# density at N) and trims the shard sweep — the cost driver is the
+# high-shard sync merge, not N.
+SHARDS = (2, 4) if _ARGS.smoke else (2, 4, 8, 16, 32)
+N = 2048
+# The device count must be pinned before jax initialises; APPEND to any
+# pre-existing XLA_FLAGS (setdefault would silently drop the override
+# and every >1-device mesh below would fail).
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") +
+    f" --xla_force_host_platform_device_count={max(SHARDS)}"
+).strip()
+
+import jax                     # noqa: E402
+import jax.numpy as jnp        # noqa: E402
+import numpy as np             # noqa: E402
+
+from repro.core import ddc     # noqa: E402
+from repro.data import spatial  # noqa: E402
+from repro.launch import mesh as mesh_mod  # noqa: E402
+
+SCHEDULES = ("sync", "async", "tree")
+
+# Per-layout generators + DDC parameters: the single shared table in
+# data/spatial.py (also consumed by tests/_phase2_script.py, so the
+# benchmark and the equivalence suite always run the same tuning).
+LAYOUTS = spatial.PHASE2_LAYOUTS
+same_partition = ddc.same_clustering
+
+
+def bench_cell(pts: np.ndarray, spec: dict, k: int, schedule: str,
+               host_labels: np.ndarray, reps: int) -> dict:
+    cfg = ddc.DDCConfig(
+        eps=spec["eps"], min_pts=spec["min_pts"], grid=spec["grid"],
+        max_clusters=spec["max_clusters"], max_verts=spec["max_verts"],
+        schedule=schedule,
+    )
+    mesh = mesh_mod.make_host_mesh(k)
+    meter = ddc.CommMeter()
+    run = ddc.make_ddc_fn(mesh, "data", cfg, meter)
+    x = jnp.asarray(pts)
+    msk = jnp.ones(len(pts), bool)
+    compiled = run.lower(
+        jax.ShapeDtypeStruct(x.shape, x.dtype),
+        jax.ShapeDtypeStruct(msk.shape, bool),
+    ).compile()
+
+    t0 = time.perf_counter()
+    out = compiled(x, msk)
+    jax.block_until_ready(out)
+    first_ms = (time.perf_counter() - t0) * 1e3
+
+    best_ms = first_ms
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = compiled(x, msk)
+        jax.block_until_ready(out)
+        best_ms = min(best_ms, (time.perf_counter() - t0) * 1e3)
+
+    glabels, gcs, _ = out
+    labels = np.asarray(glabels)
+    stats = meter.snapshot()
+    return {
+        "schedule": schedule,
+        "shards": k,
+        "wall_ms": round(best_ms, 1),
+        "first_call_ms": round(first_ms, 1),
+        "merge_steps": stats["merge_steps"],
+        "merge_slots": stats["merge_slots"],
+        "bytes_exchanged": stats["bytes_total"],
+        "collectives": stats["collectives"],
+        "buffer_bytes": cfg.buffer_bytes(),
+        "n_clusters": int(np.asarray(gcs.valid).sum()),
+        "overflow": bool(np.asarray(gcs.overflow)),
+        "matches_host": same_partition(labels, host_labels),
+    }
+
+
+def run(out_path: str | None = None, print_rows: bool = True):
+    rows = []
+    layouts_meta = {}
+    for name, spec in LAYOUTS.items():
+        pts = spec["make"](N)
+        layouts_meta[name] = {
+            k: spec[k] for k in ("eps", "min_pts", "grid", "max_verts",
+                                 "max_clusters")
+        } | {"n": len(pts)}
+        for k in SHARDS:
+            host_labels, _, _ = ddc.ddc_host(
+                pts, k, spec["eps"], spec["min_pts"], contour="grid")
+            for schedule in SCHEDULES:
+                reps = 1 if k >= 32 else 2
+                row = bench_cell(pts, spec, k, schedule, host_labels, reps)
+                row["layout"] = name
+                rows.append(row)
+                if print_rows:
+                    print(f"phase2_{name}_k{k}_{row['schedule']}: "
+                          f"wall={row['wall_ms']}ms steps={row['merge_steps']} "
+                          f"bytes={row['bytes_exchanged']} "
+                          f"clusters={row['n_clusters']} "
+                          f"match={row['matches_host']}")
+
+    all_match = all(r["matches_host"] for r in rows)
+    summary = {
+        "all_match_host": all_match,
+        "n_layouts": len(LAYOUTS),
+        "max_shards": max(SHARDS),
+        "schedules": list(SCHEDULES),
+        "sync_vs_async_bytes_at_max": _bytes_ratio(rows, max(SHARDS)),
+    }
+    out = {
+        "schema": "phase2-bench/v1",
+        "smoke": bool(_ARGS.smoke),
+        "n": N,
+        "shards": list(SHARDS),
+        "layouts": layouts_meta,
+        "rows": rows,
+        "summary": summary,
+    }
+    if out_path is None:
+        out_path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_phase2.json")
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+    if print_rows:
+        print("summary:", json.dumps(summary))
+        print("wrote", out_path)
+    if not all_match:
+        bad = [(r["layout"], r["shards"], r["schedule"])
+               for r in rows if not r["matches_host"]]
+        print("HOST MISMATCH:", bad, file=sys.stderr)
+        raise SystemExit(1)
+    return rows
+
+
+def _bytes_ratio(rows, k):
+    by = {r["schedule"]: r["bytes_exchanged"] for r in rows
+          if r["shards"] == k and r["layout"] == next(iter(LAYOUTS))}
+    if by.get("async"):
+        return round(by["sync"] / by["async"], 2)
+    return None
+
+
+if __name__ == "__main__":
+    run(out_path=_ARGS.out)

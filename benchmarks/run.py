@@ -3,7 +3,6 @@ microbenches.  Prints human tables followed by a machine-readable
 ``name,us_per_call,derived`` CSV summary."""
 from __future__ import annotations
 
-import json
 
 
 def main() -> None:

@@ -13,7 +13,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import dbscan as db
 from repro.core import ddc, partitioner, simulate as sim

@@ -92,8 +92,8 @@ class ClusterSet(NamedTuple):
     overflow: jax.Array  # ()       bool — cluster budget exceeded somewhere
 
 
-def empty_clusterset(cfg: DDCConfig) -> ClusterSet:
-    c, v = cfg.max_clusters, cfg.max_verts
+@functools.lru_cache(maxsize=None)
+def _empty_clusterset(c: int, v: int) -> ClusterSet:
     return ClusterSet(
         contours=jnp.zeros((c, v, 2), jnp.float32),
         counts=jnp.zeros((c,), jnp.int32),
@@ -101,6 +101,13 @@ def empty_clusterset(cfg: DDCConfig) -> ClusterSet:
         valid=jnp.zeros((c,), bool),
         overflow=jnp.asarray(False),
     )
+
+
+def empty_clusterset(cfg: DDCConfig) -> ClusterSet:
+    """The all-invalid ClusterSet for ``cfg``'s budgets.  Cached per
+    (C, V): callers hit this on every empty-shard code path, so repeated
+    calls must not rebuild (or retrace over) fresh device buffers."""
+    return _empty_clusterset(cfg.max_clusters, cfg.max_verts)
 
 
 # ---------------------------------------------------------------------------
@@ -158,15 +165,27 @@ def local_phase(
 
 
 # ---------------------------------------------------------------------------
-# Phase 2 — pairwise ClusterSet merge (the aggregation kernel)
+# Phase 2 — batched ClusterSet merge engine (the aggregation kernel)
 # ---------------------------------------------------------------------------
 
 
 def _components(overlap: jax.Array, valid: jax.Array) -> jax.Array:
-    """Min-label connected components over a small (2C, 2C) graph."""
+    """Min-label connected components over an (M, M) overlap graph.
+
+    Each iteration does one neighbour-min sweep followed by
+    ``ceil(log2 M)`` pointer-doubling shortcut steps
+    (``labels ← min(labels, labels[labels])`` — the same hook-and-compress
+    trick as phase 1, DESIGN.md §5), so convergence takes O(log M)
+    sweeps instead of O(component diameter).  For a valid node i,
+    ``labels[i]`` is always the index of a valid node in the same
+    component with label ≤ i, so jumping through the representative stays
+    in-component and the fixed point (sweep-stability) still forces every
+    member to the component minimum.
+    """
     m = overlap.shape[0]
     idx = jnp.arange(m, dtype=jnp.int32)
     labels = jnp.where(valid, idx, SENTINEL).astype(jnp.int32)
+    n_shortcut = max(1, (m - 1).bit_length())
 
     def cond(state):
         labels, changed = state
@@ -177,6 +196,12 @@ def _components(overlap: jax.Array, valid: jax.Array) -> jax.Array:
         neigh = jnp.where(overlap, labels[None, :], SENTINEL)
         new = jnp.minimum(labels, jnp.min(neigh, axis=1))
         new = jnp.where(valid, new, SENTINEL)
+
+        def shortcut(_, lab):
+            jump = lab[jnp.clip(lab, 0, m - 1)]
+            return jnp.where(valid, jnp.minimum(lab, jump), lab)
+
+        new = jax.lax.fori_loop(0, n_shortcut, shortcut, new)
         return new, jnp.any(new != labels)
 
     labels, _ = jax.lax.while_loop(cond, body, (labels, jnp.asarray(True)))
@@ -184,45 +209,40 @@ def _components(overlap: jax.Array, valid: jax.Array) -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def merge_pair(
-    a: ClusterSet, b: ClusterSet, cfg: DDCConfig
-) -> Tuple[ClusterSet, jax.Array, jax.Array]:
-    """Merge two ClusterSets (the paper's polygon-overlay step).
+def merge_many(batch: ClusterSet, cfg: DDCConfig) -> Tuple[ClusterSet, jax.Array]:
+    """Fold an arbitrary batch of ClusterSets into one (the paper's
+    polygon-overlay step, batched).
 
-    Overlap predicate: contours within ``merge_radius`` (grid-aligned
-    proximity — the TPU-friendly stand-in for exact polygon intersection,
-    see DESIGN.md §3; the host oracle uses the exact test).  Returns
-    (merged, map_a, map_b): old-slot → new-slot (or -1) mappings so each
-    side can relabel points locally.  Deterministic and symmetric:
-    merge_pair(a, b) and the (b, a) maps agree through composition.
+    ``batch``: a ClusterSet whose leaves carry a leading stack axis —
+    contours (K, C, V, 2), counts/sizes/valid (K, C), overflow (K,).  All
+    K·C slots are merged in one shot: the slot×slot min-distance matrix
+    comes from one kernel call (``ops.contour_min_d2``), components are
+    the transitive closure of the overlap predicate (contours within
+    ``merge_radius`` — the TPU-friendly stand-in for exact polygon
+    intersection, DESIGN.md §3/§7; the host oracle uses the exact test),
+    and merged contours are re-extracted once per output slot.
+
+    Returns (merged, maps) where maps (K, C) sends every input slot to
+    its output slot (or -1) so each contributor can relabel its points
+    locally.  Deterministic and order-equivariant: permuting the batch
+    permutes ``maps`` rows but yields the identical merged clustering
+    (components are ranked by total member count, ties by slot index).
     """
     c, v = cfg.max_clusters, cfg.max_verts
-    m = 2 * c
-    contours = jnp.concatenate([a.contours, b.contours])       # (2C, V, 2)
-    counts = jnp.concatenate([a.counts, b.counts])
-    sizes = jnp.concatenate([a.sizes, b.sizes])
-    valid = jnp.concatenate([a.valid, b.valid])
+    k = batch.valid.shape[0]
+    m = k * c
+    contours = batch.contours.reshape(m, v, 2)
+    counts = batch.counts.reshape(m)
+    sizes = batch.sizes.reshape(m)
+    valid = batch.valid.reshape(m)
 
-    # Pairwise min contour distance, memory-bounded: one row of clusters at
-    # a time against all contour vertices (avoids a (2C,2C,V,V) blow-up).
-    vert_valid_pre = (jnp.arange(v)[None, :] < counts[:, None]) & valid[:, None]
-    flat_all = contours.reshape(m * v, 2)
-    flat_valid_all = vert_valid_pre.reshape(m * v)
-
-    def row_min(i):
-        d2 = jnp.sum(
-            (contours[i][:, None, :] - flat_all[None, :, :]) ** 2, axis=-1
-        )  # (V, 2C*V)
-        vi = (jnp.arange(v) < counts[i]) & valid[i]
-        d2 = jnp.where(vi[:, None] & flat_valid_all[None, :], d2, geometry.BIG)
-        return jnp.min(d2.reshape(v, m, v), axis=(0, 2))  # (2C,)
-
-    pair_d2 = jax.lax.map(row_min, jnp.arange(m))
+    # Full slot×slot proximity matrix in one shot (no per-pair row scans).
+    pair_d2 = ops.contour_min_d2(contours, counts, valid)      # (M, M)
     r = cfg.merge_radius
     overlap = (pair_d2 <= r * r) & valid[:, None] & valid[None, :]
     overlap = overlap | (jnp.eye(m, dtype=bool) & valid[:, None])
 
-    comp = _components(overlap, valid)                         # (2C,)
+    comp = _components(overlap, valid)                         # (M,)
     roots = valid & (comp == jnp.arange(m, dtype=jnp.int32))
     comp_safe = jnp.clip(comp, 0, m - 1)
     comp_size = jnp.zeros((m,), jnp.int32).at[comp_safe].add(
@@ -231,26 +251,23 @@ def merge_pair(
 
     # Rank component roots by size (desc); keep top C.
     rank_key = jnp.where(roots, comp_size, -1)
-    order = jnp.argsort(-rank_key)                             # (2C,) root idx by size
+    order = jnp.argsort(-rank_key)                             # (M,) root idx by size
     new_slot_of_root = jnp.full((m,), -1, jnp.int32)
     kept = jnp.arange(m) < c
     new_slot_of_root = new_slot_of_root.at[order].set(
         jnp.where(kept & (rank_key[order] > 0), jnp.arange(m, dtype=jnp.int32), -1)
     )
-    slot_of_old = jnp.where(valid, new_slot_of_root[comp_safe], -1)  # (2C,)
-    map_a, map_b = slot_of_old[:c], slot_of_old[c:]
+    slot_of_old = jnp.where(valid, new_slot_of_root[comp_safe], -1)  # (M,)
 
     n_components = jnp.sum(roots.astype(jnp.int32))
-    overflow = a.overflow | b.overflow | (n_components > c)
+    overflow = jnp.any(batch.overflow) | (n_components > c)
 
     # Build merged contours per new slot.
     flat_pts = contours.reshape(m * v, 2)
-    vert_valid = (
-        jnp.arange(v)[None, :] < counts[:, None]
-    ) & valid[:, None]                                          # (2C, V)
+    vert_valid = geometry.vert_validity(counts, valid, v)       # (M, V)
 
     def build(slot):
-        member = slot_of_old == slot                            # (2C,)
+        member = slot_of_old == slot                            # (M,)
         pmask = (vert_valid & member[:, None]).reshape(m * v)
         if cfg.merge_refine == "grid":
             pts, cnt = geometry.extract_contour(
@@ -269,54 +286,104 @@ def merge_pair(
         valid=nvalid,
         overflow=overflow,
     )
-    return merged, map_a, map_b
+    return merged, slot_of_old.reshape(k, c)
+
+
+def merge_pair(
+    a: ClusterSet, b: ClusterSet, cfg: DDCConfig
+) -> Tuple[ClusterSet, jax.Array, jax.Array]:
+    """Merge two ClusterSets — a batch-2 ``merge_many``.
+
+    Returns (merged, map_a, map_b): old-slot → new-slot (or -1) mappings
+    so each side can relabel its points locally.  Deterministic and
+    symmetric: merge_pair(a, b) and the (b, a) maps agree through
+    composition.
+    """
+    batch = jax.tree.map(lambda x, y: jnp.stack([x, y]), a, b)
+    merged, maps = merge_many(batch, cfg)
+    return merged, maps[0], maps[1]
 
 
 # ---------------------------------------------------------------------------
-# Phase 2 schedules (shard_map collectives)
+# Phase 2 schedules — thin collective schedules over merge_many
 # ---------------------------------------------------------------------------
 
 
-def merge_sync(cs: ClusterSet, cfg: DDCConfig, axis: str):
-    """Barrier schedule: all-gather every shard's ClusterSet, fold locally.
+@dataclasses.dataclass
+class CommMeter:
+    """Trace-time comm-volume accounting for the phase-2 schedules.
 
-    Matches the paper's synchronous model.  Returns (global ClusterSet,
-    local-slot → global-slot map (C,)).
+    Schedules call the ``add_*`` hooks while they trace.  Every quantity
+    is static (permutation lists, gather widths, and buffer shapes are
+    all known at trace time), so the meter is exact without instrumenting
+    the compiled program.  Fill it by tracing once (e.g.
+    ``jit(fn).lower(...)``) and read ``snapshot()``; re-tracing the same
+    function re-counts, so ``reset()`` between traces.
+
+    ``bytes_total`` sums message bytes over every lane→lane link (an
+    all-gather among K lanes of a B-byte buffer counts K·(K−1)·B, a
+    ppermute counts B per (src, dst) pair).  ``merge_steps`` counts
+    merge_many invocations on the critical path; ``merge_slots`` sums the
+    K·C slot counts those merges closed over.
+    """
+
+    bytes_total: int = 0
+    collectives: int = 0
+    merge_steps: int = 0
+    merge_slots: int = 0
+
+    def add_collective(self, links: int, nbytes: int) -> None:
+        self.bytes_total += links * nbytes
+        self.collectives += 1
+
+    def add_merge(self, batch: int, slots: int) -> None:
+        self.merge_steps += 1
+        self.merge_slots += batch * slots
+
+    def reset(self) -> None:
+        self.bytes_total = self.collectives = 0
+        self.merge_steps = self.merge_slots = 0
+
+    def snapshot(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _wire_bytes(cs: ClusterSet) -> int:
+    from repro.parallel import compress
+    return compress.pytree_wire_bytes(cs)
+
+
+def _permute(tree, axis: str, perm, meter: CommMeter | None):
+    if meter is not None:
+        meter.add_collective(len(perm), _wire_bytes(tree))
+    return jax.tree.map(lambda x: jax.lax.ppermute(x, axis, perm), tree)
+
+
+def merge_sync(cs: ClusterSet, cfg: DDCConfig, axis: str,
+               meter: CommMeter | None = None):
+    """Barrier schedule: all-gather every shard's ClusterSet, then ONE
+    batched merge_many over all K·C slots (the paper's synchronous model:
+    everyone waits for the slowest, then merges).  Collective bytes per
+    lane: (K−1)·B.  Returns (global ClusterSet, local-slot → global-slot
+    map (C,)).
     """
     k = compat.axis_size(axis)
     me = jax.lax.axis_index(axis)
+    if meter is not None:
+        meter.add_collective(k * (k - 1), _wire_bytes(cs))
+        meter.add_merge(k, cfg.max_clusters)
     gathered = jax.lax.all_gather(cs, axis)   # pytree: leaves (K, ...)
-
-    def fold(i, state):
-        acc, my_map, merged_mine = state
-        nxt = jax.tree.map(lambda x: x[i], gathered)
-        new_acc, map_a, map_b = merge_pair(acc, nxt, cfg)
-        # If shard i is me, my slots enter via map_b; else compose via map_a.
-        my_map = jnp.where(
-            i == me,
-            map_b,
-            jnp.where(my_map >= 0, map_a[jnp.clip(my_map, 0)], -1),
-        )
-        return new_acc, my_map, merged_mine | (i == me)
-
-    init = (
-        jax.tree.map(lambda x: x[0], gathered),
-        jnp.where(
-            me == 0,
-            jnp.arange(cfg.max_clusters, dtype=jnp.int32),
-            jnp.full((cfg.max_clusters,), -1, jnp.int32),
-        ),
-        me == 0,
-    )
-    acc, my_map, _ = jax.lax.fori_loop(1, k, fold, init)
-    my_map = jnp.where(cs.valid, my_map, -1)
-    return acc, my_map
+    gcs, maps = merge_many(gathered, cfg)
+    my_map = jnp.take(maps, me, axis=0)
+    return gcs, jnp.where(cs.valid, my_map, -1)
 
 
-def merge_async(cs: ClusterSet, cfg: DDCConfig, axis: str):
-    """Butterfly (recursive-doubling) schedule: log2(K) ppermute+merge
-    rounds; merge compute overlaps the next round's permute.  Matches the
-    paper's asynchronous model (merge as soon as the partner is ready).
+def merge_async(cs: ClusterSet, cfg: DDCConfig, axis: str,
+                meter: CommMeter | None = None):
+    """Butterfly (recursive-doubling) schedule: log2(K) ppermute + batch-2
+    merge rounds; merge compute of round ℓ overlaps the round ℓ+1 permute
+    in XLA's schedule.  Matches the paper's asynchronous model (merge as
+    soon as the partner is ready).  Collective bytes per lane: log2(K)·B.
     """
     k = compat.axis_size(axis)
     assert k & (k - 1) == 0, f"async schedule needs power-of-two shards, got {k}"
@@ -329,25 +396,27 @@ def merge_async(cs: ClusterSet, cfg: DDCConfig, axis: str):
     for level in range(rounds):
         stride = 1 << level
         perm = [(i, i ^ stride) for i in range(k)]
-        partner_cs = jax.tree.map(
-            lambda x: jax.lax.ppermute(x, axis, perm), acc
-        )
+        partner_cs = _permute(acc, axis, perm, meter)
         low = (me & stride) == 0
         a = jax.tree.map(lambda s, p: jnp.where(low, s, p), acc, partner_cs)
         b = jax.tree.map(lambda s, p: jnp.where(low, p, s), acc, partner_cs)
         # `a`/`b` ordering is lane-consistent, so both sides compute the
         # identical merged buffer (deterministic merge).
+        if meter is not None:
+            meter.add_merge(2, cfg.max_clusters)
         acc, map_a, map_b = merge_pair(a, b, cfg)
         mine = jnp.where(low, map_a, map_b)
         my_map = jnp.where(my_map >= 0, mine[jnp.clip(my_map, 0)], -1)
     return acc, my_map
 
 
-def merge_tree(cs: ClusterSet, cfg: DDCConfig, axis: str):
-    """The paper's Algorithm 2, literally: nodes join groups of D, elect
-    the lowest-index member as leader, members SEND their contours to the
-    leader (ppermute), the leader merges; repeat up the tree until the
-    root holds the global clusters, then broadcast down.
+def merge_tree(cs: ClusterSet, cfg: DDCConfig, axis: str,
+               meter: CommMeter | None = None):
+    """The paper's Algorithm 2: nodes join groups of D, elect the
+    lowest-index member as leader, members SEND their contours to the
+    leader (ppermute); the leader folds its whole group in ONE batch-D
+    merge_many; repeat up the tree until the root holds the global
+    clusters, then broadcast down.
 
     Wire cost per level: each member sends one ClusterSet to its leader
     ((D-1)/D of lanes send), + one broadcast at the end — between sync's
@@ -363,23 +432,29 @@ def merge_tree(cs: ClusterSet, cfg: DDCConfig, axis: str):
     stride = 1
     while stride < k:
         # Group = lanes {base, base+stride, ..., base+(D-1)*stride};
-        # leader = base.  Members send to the leader one by one; the
-        # leader folds each arrival (the paper's Recv loop).
+        # leader = base.  Members send to the leader (one ppermute per
+        # member rank — ppermute sources must be unique); the leader
+        # closes over the whole group in a single batched merge.
+        batch = [acc]
         for j in range(1, d):
             src_off = j * stride
             if src_off >= k:
                 break
             perm = [(i, i - src_off) for i in range(k) if i - src_off >= 0
                     and (i // stride) % d == j and (i - src_off) // (stride * d) == i // (stride * d)]
-            moved = jax.tree.map(lambda x: jax.lax.ppermute(x, axis, perm), acc)
-            is_leader = (me // stride) % d == 0
-            merged, map_a, map_b = merge_pair(acc, moved, cfg)
-            # Leaders fold; everyone else keeps their acc (their map will
-            # be resolved by the broadcast below).
-            acc = jax.tree.map(
-                lambda m, a: jnp.where(is_leader, m, a), merged, acc)
-            my_map = jnp.where(is_leader & (my_map >= 0),
-                               map_a[jnp.clip(my_map, 0)], my_map)
+            batch.append(_permute(acc, axis, perm, meter))
+        is_leader = (me // stride) % d == 0
+        if meter is not None:
+            meter.add_merge(len(batch), cfg.max_clusters)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *batch)
+        merged, maps = merge_many(stacked, cfg)
+        # Leaders fold; everyone else keeps their acc (their map will be
+        # resolved by the broadcast below).  Slot 0 of the batch is the
+        # leader's own accumulator.
+        acc = jax.tree.map(
+            lambda m, a: jnp.where(is_leader, m, a), merged, acc)
+        my_map = jnp.where(is_leader & (my_map >= 0),
+                           maps[0][jnp.clip(my_map, 0)], my_map)
         stride *= d
 
     # Root (lane 0) broadcasts the global ClusterSet down the same tree
@@ -397,7 +472,7 @@ def merge_tree(cs: ClusterSet, cfg: DDCConfig, axis: str):
                 continue
             perm = [(b, b + j * stride) for b in range(0, k, stride * d)
                     if b + j * stride < k]
-            moved = jax.tree.map(lambda x: jax.lax.ppermute(x, axis, perm), gcs)
+            moved = _permute(gcs, axis, perm, meter)
             is_receiver = (me % (stride * d)) == j * stride
             gcs = jax.tree.map(
                 lambda g, mv: jnp.where(is_receiver, mv, g), gcs, moved)
@@ -411,11 +486,15 @@ def merge_tree(cs: ClusterSet, cfg: DDCConfig, axis: str):
 
 def match_to_global(cs: ClusterSet, gcs: ClusterSet, cfg: DDCConfig) -> jax.Array:
     """Map each local cluster to the nearest global cluster (by min
-    contour distance, within merge_radius).  Returns (C,) slot ids/-1."""
+    contour distance, within merge_radius).  Returns (C,) slot ids/-1.
+
+    Short-circuits on empty inputs: when either side has no valid slots
+    (an empty shard, or a shard whose points were all noise) the result
+    is all -1 by definition, so the per-slot distance scans are skipped
+    entirely at runtime (``lax.cond``) instead of being computed eagerly.
+    """
     c, v = cfg.max_clusters, cfg.max_verts
-    gvalid_pts = (
-        (jnp.arange(v)[None, :] < gcs.counts[:, None]) & gcs.valid[:, None]
-    ).reshape(c * v)
+    gvalid_pts = geometry.vert_validity(gcs.counts, gcs.valid, v).reshape(c * v)
     gflat = gcs.contours.reshape(c * v, 2)
 
     def one(i):
@@ -428,7 +507,14 @@ def match_to_global(cs: ClusterSet, gcs: ClusterSet, cfg: DDCConfig) -> jax.Arra
         ok = cs.valid[i] & (per_g[best] <= r * r)
         return jnp.where(ok, best, -1).astype(jnp.int32)
 
-    return jax.lax.map(one, jnp.arange(c))
+    def compute(_):
+        return jax.lax.map(one, jnp.arange(c))
+
+    def empty(_):
+        return jnp.full((c,), -1, jnp.int32)
+
+    any_work = jnp.any(cs.valid) & jnp.any(gcs.valid)
+    return jax.lax.cond(any_work, compute, empty, None)
 
 
 def ddc_shard(
@@ -437,32 +523,35 @@ def ddc_shard(
     cfg: DDCConfig,
     axis: str,
     key: jax.Array | None = None,
+    meter: CommMeter | None = None,
 ):
     """Full DDC inside ``shard_map``: phase 1 locally, phase 2 across
     ``axis``.  Returns (global labels for local points (n,),
     global ClusterSet, local→global slot map)."""
     dense, cs = local_phase(points, mask, cfg, key)
     if cfg.schedule == "sync":
-        gcs, my_map = merge_sync(cs, cfg, axis)
+        gcs, my_map = merge_sync(cs, cfg, axis, meter)
     elif cfg.schedule == "tree":
-        gcs, my_map = merge_tree(cs, cfg, axis)
+        gcs, my_map = merge_tree(cs, cfg, axis, meter)
     else:
-        gcs, my_map = merge_async(cs, cfg, axis)
+        gcs, my_map = merge_async(cs, cfg, axis, meter)
     glabels = jnp.where(dense >= 0, my_map[jnp.clip(dense, 0)], -1)
     return glabels, gcs, my_map
 
 
-def make_ddc_fn(mesh, axis: str, cfg: DDCConfig):
+def make_ddc_fn(mesh, axis: str, cfg: DDCConfig, meter: CommMeter | None = None):
     """Build the jit-able distributed DDC entry point over ``mesh``.
 
-    points: (N, 2) sharded along ``axis``; mask: (N,).
+    points: (N, 2) sharded along ``axis``; mask: (N,).  An optional
+    ``meter`` collects static comm-volume counters while the function
+    traces (see CommMeter).
     """
     from jax.sharding import PartitionSpec as P
 
     @jax.jit
     def run(points, mask):
         fn = compat.shard_map(
-            lambda p, m: ddc_shard(p, m, cfg, axis),
+            lambda p, m: ddc_shard(p, m, cfg, axis, meter=meter),
             mesh=mesh,
             in_specs=(P(axis, None), P(axis)),
             out_specs=(P(axis), P(), P(axis)),
@@ -471,6 +560,21 @@ def make_ddc_fn(mesh, axis: str, cfg: DDCConfig):
         return fn(points, mask)
 
     return run
+
+
+def same_clustering(a: np.ndarray, b: np.ndarray) -> bool:
+    """True iff two label arrays describe the IDENTICAL clustering: the
+    same noise set (label < 0) and a bijection between cluster labels.
+    This is the bit-exactness predicate the phase-2 benchmarks and the
+    schedule-equivalence tests apply between the distributed path and
+    ``ddc_host``."""
+    a = np.asarray(a)
+    b = np.asarray(b)
+    if ((a < 0) != (b < 0)).any():
+        return False
+    m = a >= 0
+    pairs = set(zip(a[m].tolist(), b[m].tolist()))
+    return len(pairs) == len(set(a[m].tolist())) == len(set(b[m].tolist()))
 
 
 # ---------------------------------------------------------------------------

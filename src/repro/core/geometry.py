@@ -18,7 +18,6 @@ DESIGN.md §3.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax
@@ -283,6 +282,13 @@ def convex_hull_jax(points: Array, mask: Array, max_verts: int) -> Tuple[Array, 
     )
     hull = jnp.where(hull >= BIG, 0.0, hull)
     return hull, count
+
+
+def vert_validity(counts: Array, valid: Array, max_verts: int) -> Array:
+    """(m, max_verts) per-vertex validity of padded contour buffers: the
+    first ``counts[i]`` vertices of each valid slot are real, the rest are
+    padding.  Shared by the phase-2 merge matrix and slot matching."""
+    return (jnp.arange(max_verts)[None, :] < counts[:, None]) & valid[:, None]
 
 
 def min_cross_distance_sq(

@@ -24,7 +24,6 @@ import dataclasses
 import math
 from typing import Sequence
 
-import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)

@@ -12,7 +12,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterator
 
-import jax
 import numpy as np
 
 

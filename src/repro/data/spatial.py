@@ -93,6 +93,106 @@ def make_worm(n: int, seed: int = 1, waves: int = 3, amp: float = 0.2,
     return (pts + rng.normal(0, width, (n, 2))).astype(np.float32)
 
 
+def _disc(rng, n, cx, cy, a, b=None, rot=0.0):
+    """Uniform-density filled ellipse — no Gaussian tails, so cluster
+    extents are sharp and DBSCAN boundaries are seed-stable."""
+    b = a if b is None else b
+    t = rng.uniform(0, 2 * np.pi, n)
+    r = np.sqrt(rng.uniform(0, 1, n))
+    pts = np.stack([a * r * np.cos(t), b * r * np.sin(t)], -1)
+    c, s = np.cos(rot), np.sin(rot)
+    return pts @ np.array([[c, -s], [s, c]]).T + [cx, cy]
+
+
+def morton_sorted(pts: np.ndarray) -> np.ndarray:
+    """Reorder points by 2-D Morton (Z-order) code so *contiguous index
+    blocks are spatially compact* — the order block-partitioned shards
+    (and ``ddc_host``'s default split) see from a spatial partitioner.
+    Without it, a high shard count hands every shard a sparse subsample
+    of each shape and local density collapses below ``min_pts``."""
+    from repro.core import partitioner
+
+    code = np.asarray(partitioner.morton_code(pts))
+    return pts[np.argsort(code, kind="stable")]
+
+
+def make_rings(n: int = 2048, seed: int = 2) -> np.ndarray:
+    """Rings scenario (phase-2 benchmark): a ring *surrounding* a disc —
+    the non-convexity case where a convex-hull contour would wrongly
+    merge the pair — plus two separate rings.  Morton-ordered."""
+    rng = np.random.default_rng(seed)
+    w = np.array([0.34, 0.12, 0.27, 0.27])
+    c = (w / w.sum() * n).astype(int)
+    c[0] += n - c.sum()
+    parts = [
+        _ring(rng, c[0], 0.30, 0.64, 0.095, 0.004),
+        _disc(rng, c[1], 0.30, 0.64, 0.010),
+        _ring(rng, c[2], 0.74, 0.78, 0.050, 0.004),
+        _ring(rng, c[3], 0.72, 0.20, 0.050, 0.004),
+    ]
+    return morton_sorted(np.clip(np.concatenate(parts), 0, 1).astype(np.float32))
+
+
+def make_linked_ovals(n: int = 2048, seed: int = 3) -> np.ndarray:
+    """Linked-ovals scenario (phase-2 benchmark): two overlapping tilted
+    ovals that must merge into one global cluster across any partition
+    cut, plus a separate small oval.  Morton-ordered."""
+    rng = np.random.default_rng(seed)
+    w = np.array([0.4, 0.4, 0.2])
+    c = (w / w.sum() * n).astype(int)
+    c[0] += n - c.sum()
+    parts = [
+        _disc(rng, c[0], 0.38, 0.56, 0.14, 0.05, 0.5),
+        _disc(rng, c[1], 0.56, 0.50, 0.14, 0.05, -0.5),   # linked: overlaps
+        _disc(rng, c[2], 0.82, 0.16, 0.07, 0.03, 0.2),
+    ]
+    return morton_sorted(np.clip(np.concatenate(parts), 0, 1).astype(np.float32))
+
+
+def make_noise_heavy(n: int = 2048, seed: int = 4,
+                     noise_frac: float = 0.3) -> np.ndarray:
+    """Noise-heavy scenario (phase-2 benchmark): five compact uniform
+    discs under 30 % background noise — exercises noise rejection, empty
+    merge slots, and (at high shard counts) fully-noise shards.
+    Morton-ordered."""
+    rng = np.random.default_rng(seed)
+    n_noise = int(n * noise_frac)
+    n_sig = n - n_noise
+    centers = np.array([[0.2, 0.2], [0.2, 0.8], [0.8, 0.2], [0.8, 0.8], [0.5, 0.5]])
+    per = n_sig // 5
+    parts = [
+        _disc(rng, per + (n_sig - 5 * per if i == 0 else 0), cx, cy, 0.055)
+        for i, (cx, cy) in enumerate(centers)
+    ]
+    noise = rng.uniform(0, 1, (n_noise, 2))
+    return morton_sorted(
+        np.clip(np.concatenate(parts + [noise]), 0, 1).astype(np.float32))
+
+
+# Phase-2 benchmark/test layout registry: generator + the DDC parameters
+# (eps, min_pts, grid, max_verts, max_clusters) tuned so every local AND
+# merged contour fits the vertex budget at 2–32 shards and inter-cluster
+# gaps clear both merge predicates with margin (DESIGN.md §7 sizing
+# rule).  benchmarks/phase2.py and tests/_phase2_script.py consume this
+# single table so the benchmark and the equivalence suite can never
+# drift onto different configurations.
+PHASE2_LAYOUTS = {
+    "rings": dict(make=make_rings, eps=0.008, min_pts=5,
+                  grid=64, max_verts=80, max_clusters=8),
+    "linked_ovals": dict(make=make_linked_ovals, eps=0.012, min_pts=5,
+                         grid=48, max_verts=88, max_clusters=8),
+    # Worm: the *merged* contour must hold the whole curve's boundary
+    # (the tree schedule resolves non-leader slots against it), so the
+    # raster is coarse enough that the global outline fits max_verts.
+    "worm": dict(make=lambda n, seed=1: morton_sorted(
+                     make_worm(n, seed=seed, waves=1, amp=0.1)),
+                 eps=0.012, min_pts=5, grid=32, max_verts=96,
+                 max_clusters=8),
+    "noise_heavy": dict(make=make_noise_heavy, eps=0.012, min_pts=8,
+                        grid=48, max_verts=64, max_clusters=8),
+}
+
+
 def make_blobs(
     n: int, k: int, seed: int = 0, spread: float = 0.02, margin: float = 0.12
 ) -> tuple[np.ndarray, np.ndarray]:

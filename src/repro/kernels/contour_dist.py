@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: batched contour-pair min-distance matrix — the DDC
+phase-2 hot-spot (cluster-merge proximity tests).
+
+Phase 2 decides which clusters merge by the minimum pairwise distance
+between their contour vertex buffers.  The per-pair formulation (one row
+of clusters at a time against all vertices, ``lax.map``) serialises M
+small reductions; the batched formulation below computes the full
+(M, M) slot×slot proximity matrix in one pallas_call:
+
+* contours arrive flattened cluster-major as (M·V, 2) vertices plus an
+  (M·V,) validity vector (padding verts and invalid slots masked out);
+* each grid step loads a (bi·V, 2) row strip and a (bj·V, 2) column
+  strip, computes the (bi·V, bj·V) squared-distance tile with the MXU
+  expansion |x|² + |y|² − 2·x·yᵀ (same centred-d2 machinery as
+  ``pairwise_dist.py`` — callers centre coordinates so the expansion's
+  f32 cancellation error stays far below merge thresholds), and
+* min-reduces the (V, V) sub-blocks to a (bi, bj) output tile.
+
+Invalid vertices contribute ``BIG``; a slot with no valid vertices gets a
+BIG row/column, which callers treat as "never merges".
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEF_BI = 8
+DEF_BJ = 8
+BIG = 1e30
+
+
+def _contour_min_kernel(x_ref, y_ref, xv_ref, yv_ref, o_ref, *, v: int):
+    bi, bj = o_ref.shape
+    x = x_ref[...].astype(jnp.float32)           # (bi*v, 2)
+    y = y_ref[...].astype(jnp.float32)           # (bj*v, 2)
+    xx = jnp.sum(x * x, axis=-1)[:, None]
+    yy = jnp.sum(y * y, axis=-1)[None, :]
+    d2 = xx + yy - 2.0 * jax.lax.dot_general(
+        x, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    d2 = jnp.maximum(d2, 0.0)
+    ok = (xv_ref[...] > 0)[:, None] & (yv_ref[...] > 0)[None, :]
+    d2 = jnp.where(ok, d2, BIG)
+    # Min over each cluster pair's (V, V) vertex sub-block.
+    o_ref[...] = jnp.min(d2.reshape(bi, v, bj, v), axis=(1, 3))
+
+
+@functools.partial(jax.jit, static_argnames=("v", "bi", "bj", "interpret"))
+def contour_min_d2(
+    x: jax.Array, xv: jax.Array, v: int, *, bi: int = DEF_BI, bj: int = DEF_BJ,
+    interpret: bool = False,
+) -> jax.Array:
+    """Slot×slot min squared contour distance.
+
+    x: (m·v, 2) flattened contour vertices (cluster-major, pre-centred);
+    xv: (m·v,) int32 vertex validity.  m must be a multiple of both ``bi``
+    and ``bj`` (ops.py pads with invalid slots).  Returns (m, m) f32 with
+    BIG where either slot has no valid vertices.
+    """
+    n, d = x.shape
+    assert n % v == 0, (n, v)
+    m = n // v
+    bi = min(bi, m)
+    bj = min(bj, m)
+    assert m % bi == 0 and m % bj == 0, (m, bi, bj)
+    return pl.pallas_call(
+        functools.partial(_contour_min_kernel, v=v),
+        grid=(m // bi, m // bj),
+        in_specs=[
+            pl.BlockSpec((bi * v, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bj * v, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bi * v,), lambda i, j: (i,)),
+            pl.BlockSpec((bj * v,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bi, bj), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, m), jnp.float32),
+        interpret=interpret,
+    )(x, x, xv, xv)

@@ -10,11 +10,13 @@ override dispatch (tests use "interpret").
 """
 from __future__ import annotations
 
+import math
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from . import contour_dist as _cd
 from . import flash_attention as _fa
 from . import pairwise_dist as _pd
 from . import ref
@@ -86,6 +88,40 @@ def min_label_sweep(x, mask, labels, core, eps, *, bn: int = 512, bm: int = 512)
     out = _pd.min_label_sweep(xp, mp, lp, cp, eps, bn=min(bn, xp.shape[0]),
                               bm=min(bm, xp.shape[0]), interpret=_interpret())
     return out[:n]
+
+
+def contour_min_d2(contours: jax.Array, counts: jax.Array, valid: jax.Array,
+                   *, bi: int = 8, bj: int = 8) -> jax.Array:
+    """DDC phase-2 merge matrix: (m, m) min squared distance between every
+    pair of padded contour buffers (1e30 where either side is empty).
+
+    contours: (m, v, 2); counts: (m,); valid: (m,) bool.  On the Pallas
+    path coordinates are centred on the valid-vertex bbox midpoint first —
+    d2 is translation-invariant, but the MXU xx+yy−2xy expansion is
+    cancellation-prone (DESIGN.md §4 item 6) and merge thresholds are
+    O(cell²).  The jnp reference uses the difference form directly.
+    """
+    if not _use_pallas():
+        return ref.contour_min_d2(contours, counts, valid)
+    m, v, d = contours.shape
+    big = jnp.float32(3.4e38)
+    pts = contours.astype(jnp.float32)
+    vert_valid = (jnp.arange(v)[None, :] < counts[:, None]) & valid[:, None]
+    lo = jnp.min(jnp.where(vert_valid[..., None], pts, big), axis=(0, 1))
+    hi = jnp.max(jnp.where(vert_valid[..., None], pts, -big), axis=(0, 1))
+    mid = jnp.where(hi >= lo, 0.5 * (lo + hi), 0.0)
+    flat = (pts - mid).reshape(m * v, d)
+    fv = vert_valid.reshape(m * v).astype(jnp.int32)
+    # Pad the slot axis with invalid slots up to a tile multiple.
+    bi = min(bi, m)
+    bj = min(bj, m)
+    mult = bi * bj // math.gcd(bi, bj)
+    pad = (-m) % mult
+    if pad:
+        flat = jnp.pad(flat, ((0, pad * v), (0, 0)))
+        fv = jnp.pad(fv, (0, pad * v))
+    out = _cd.contour_min_d2(flat, fv, v, bi=bi, bj=bj, interpret=_interpret())
+    return out[:m, :m]
 
 
 # -- block-sparse spatial pruning (DDC phase 1) ------------------------------

@@ -35,6 +35,31 @@ def neighbor_count(x: Array, mask: Array, eps: float) -> Array:
     return jnp.sum(adj, axis=1).astype(jnp.int32)
 
 
+def contour_min_d2(contours: Array, counts: Array, valid: Array) -> Array:
+    """DDC phase-2 merge matrix: min squared distance between every pair
+    of padded contour buffers.
+
+    contours: (m, v, 2); counts: (m,) valid verts per slot; valid: (m,)
+    slot validity.  Returns (m, m) f32 with 1e30 where either slot has no
+    valid vertices.  Memory-bounded: one row of clusters at a time against
+    all vertices (the difference form here is the semantic reference; the
+    Pallas kernel uses the centred MXU expansion and must match within
+    tolerance)."""
+    m, v, _ = contours.shape
+    big = jnp.float32(1e30)
+    pts = contours.astype(jnp.float32)
+    vert_valid = (jnp.arange(v)[None, :] < counts[:, None]) & valid[:, None]
+    flat = pts.reshape(m * v, 2)
+    flat_valid = vert_valid.reshape(m * v)
+
+    def row(i):
+        d2 = jnp.sum((pts[i][:, None, :] - flat[None, :, :]) ** 2, axis=-1)
+        d2 = jnp.where(vert_valid[i][:, None] & flat_valid[None, :], d2, big)
+        return jnp.min(d2.reshape(v, m, v), axis=(0, 2))  # (m,)
+
+    return jax.lax.map(row, jnp.arange(m))
+
+
 def min_label_sweep(x: Array, mask: Array, labels: Array, core: Array,
                     eps) -> Array:
     """One DBSCAN min-label sweep: per point, the min label over masked

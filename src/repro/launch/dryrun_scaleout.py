@@ -17,7 +17,6 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs
 from repro.configs.shapes import SHAPES

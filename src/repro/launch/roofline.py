@@ -14,9 +14,7 @@ SPMD collectives into the per-device module, so sums are per device).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from typing import Any
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9

@@ -11,7 +11,6 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import configs

@@ -17,7 +17,6 @@ Production shape (lowered by the dry-run; identical code path):
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import time
 

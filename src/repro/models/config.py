@@ -8,7 +8,6 @@ encoder-decoder (whisper) and prefix-embedding VLM stubs.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Tuple
 
 

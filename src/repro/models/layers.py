@@ -14,9 +14,7 @@ variant is the §Perf hillclimb comparison).
 """
 from __future__ import annotations
 
-import functools
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp

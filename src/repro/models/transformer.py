@@ -11,10 +11,6 @@ the MoE shard_map island in layers.py.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, NamedTuple
-
 import jax
 import jax.numpy as jnp
 

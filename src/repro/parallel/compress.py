@@ -17,10 +17,30 @@ int8, dequantise, all-gather.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import compat
+
+
+def pytree_wire_bytes(tree) -> int:
+    """Static wire footprint of a pytree in bytes: sum over leaves of
+    element-count × itemsize.
+
+    This is what one lane puts on the wire when the tree crosses a
+    collective (DDC phase 2 threads it through its comm-volume meters).
+    Shapes and dtypes are static, so this works identically on concrete
+    arrays, tracers, and ``ShapeDtypeStruct``s — call it at trace time.
+    """
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        shape = getattr(leaf, "shape", ())
+        dtype = np.dtype(getattr(leaf, "dtype", np.float32))
+        total += int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+    return total
 
 
 def quantize_int8(x: jax.Array):
@@ -53,9 +73,6 @@ def ef_compress(grads, errors):
     wire = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
     errs = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
     return wire, errs
-
-
-import functools
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1,))

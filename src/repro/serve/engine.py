@@ -8,7 +8,6 @@ is in-place on device.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax

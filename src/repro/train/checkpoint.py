@@ -27,8 +27,6 @@ import os
 import shutil
 import tempfile
 import threading
-import time
-from typing import Any
 
 import jax
 import numpy as np

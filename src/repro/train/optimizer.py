@@ -13,7 +13,6 @@ All updates are pure: (grads, state, params) -> (new_params, new_state).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

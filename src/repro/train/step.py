@@ -8,7 +8,6 @@ the cross-DP gradient reduction (parallel/compress.py).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, NamedTuple
 
 import jax

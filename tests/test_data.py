@@ -1,8 +1,7 @@
 """Data pipeline + DDC curation tests."""
 import numpy as np
-import pytest
 
-from repro.data import curation, pipeline, spatial
+from repro.data import curation, pipeline
 
 
 def dcfg(**kw):

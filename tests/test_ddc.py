@@ -3,9 +3,7 @@
 The distributed shard_map path (8 devices) lives in test_distributed.py.
 """
 import numpy as np
-import jax
 import jax.numpy as jnp
-import pytest
 from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.core import dbscan as db

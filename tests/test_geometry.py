@@ -1,7 +1,6 @@
 """Geometry unit + property tests (hulls, contours, overlap)."""
 import numpy as np
 import jax.numpy as jnp
-import pytest
 from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.core import geometry as G

@@ -4,7 +4,9 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.kernels import contour_dist as cd
 from repro.kernels import flash_attention as fa
+from repro.kernels import ops
 from repro.kernels import pairwise_dist as pd
 from repro.kernels import ref
 from repro.kernels import ssd_scan as ssd
@@ -54,6 +56,65 @@ class TestPairwiseDist:
         ok = (d2 <= 0.16) & np.asarray(core)[None, :]
         want = np.where(ok, np.arange(128)[None, :], 2**30).min(1)
         np.testing.assert_array_equal(got, want)
+
+
+class TestContourMinD2:
+    @pytest.mark.parametrize("m,v,bi,bj", [
+        (16, 32, 8, 8),
+        (32, 64, 8, 8),
+        (8, 16, 4, 8),
+        (24, 8, 8, 4),
+    ])
+    def test_sweep(self, m, v, bi, bj):
+        contours = jnp.asarray(RNG.uniform(0, 1, (m, v, 2)), jnp.float32)
+        counts = jnp.asarray(RNG.integers(0, v + 1, m), jnp.int32)
+        valid = jnp.asarray(RNG.random(m) > 0.25)
+        vert_valid = (jnp.arange(v)[None, :] < counts[:, None]) & valid[:, None]
+        got = cd.contour_min_d2(
+            contours.reshape(m * v, 2), vert_valid.reshape(m * v).astype(jnp.int32),
+            v, bi=bi, bj=bj, interpret=True)
+        want = ref.contour_min_d2(contours, counts, valid)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_ops_dispatch_pads_odd_slot_counts(self):
+        m, v = 11, 16
+        contours = jnp.asarray(RNG.uniform(0, 1, (m, v, 2)), jnp.float32)
+        counts = jnp.asarray(RNG.integers(1, v + 1, m), jnp.int32)
+        valid = jnp.ones(m, bool)
+        want = ref.contour_min_d2(contours, counts, valid)
+        prev, ops.FORCE = ops.FORCE, "interpret"
+        try:
+            got = ops.contour_min_d2(contours, counts, valid)
+        finally:
+            ops.FORCE = prev
+        assert got.shape == (m, m)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_centred_offset_data(self):
+        """The kernel's MXU expansion must survive a large coordinate
+        offset (the centring step, DESIGN.md §4 item 6)."""
+        m, v = 16, 32
+        base = jnp.asarray(RNG.uniform(0, 1, (m, v, 2)), jnp.float32)
+        counts = jnp.full((m,), v, jnp.int32)
+        valid = jnp.ones(m, bool)
+        want = ref.contour_min_d2(base, counts, valid)
+        prev, ops.FORCE = ops.FORCE, "interpret"
+        try:
+            got = ops.contour_min_d2(base + 100.0, counts, valid)
+        finally:
+            ops.FORCE = prev
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-3, atol=1e-4)
+
+    def test_empty_slots_get_big(self):
+        m, v = 8, 16
+        contours = jnp.zeros((m, v, 2), jnp.float32)
+        counts = jnp.zeros((m,), jnp.int32)
+        valid = jnp.zeros((m,), bool)
+        out = np.asarray(ref.contour_min_d2(contours, counts, valid))
+        assert (out >= 1e29).all()
 
 
 class TestFlashAttention:

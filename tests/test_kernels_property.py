@@ -1,9 +1,7 @@
 """Property-based kernel tests (hypothesis): invariants that must hold
 for any shape/content, complementing the fixed-shape sweeps."""
 import numpy as np
-import jax
 import jax.numpy as jnp
-import pytest
 from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.kernels import ref

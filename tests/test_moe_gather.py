@@ -1,6 +1,5 @@
 """dispatch_gather kernel sweeps vs the jnp construction it replaces."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

@@ -1,6 +1,5 @@
 """Optimizer unit tests: convergence on a quadratic, schedules, clipping,
 adafactor memory shape, stochastic rounding."""
-import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest

@@ -1,0 +1,38 @@
+"""Merge-schedule equivalence property suite (subprocess — the XLA device
+count must be set before jax initialises, which pytest's process already
+did with 1 device).
+
+For every layout data/spatial.py can generate, at 2/4/8/16 shards, all
+three phase-2 schedules must reproduce ``ddc_host``'s global clustering
+bit-exactly.  The per-layout parameters live in _phase2_script.py.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = os.path.join(os.path.dirname(__file__), "_phase2_script.py")
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+LAYOUTS = ["blobs", "clustered", "d1", "d2", "worm_default",
+           "rings", "linked_ovals", "worm", "noise_heavy"]
+
+
+def run_check(name: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(SRC)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, SCRIPT, name],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+    assert proc.returncode == 0, f"{name} failed:\n{proc.stdout}\n{proc.stderr}"
+    return proc.stdout
+
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_schedules_match_host(layout):
+    out = run_check(layout)
+    assert "ALL_OK" in out
+    assert out.count("PASS") == 4  # one per shard count

@@ -6,7 +6,6 @@ by ~n_layers.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch import hlo_cost, roofline
@@ -96,6 +95,5 @@ def test_roofline_terms_and_bottleneck():
 def test_spmd_costs_are_per_device():
     """Partitioned modules report per-device flops (documented invariant
     the roofline formulas rely on)."""
-    import os
     if len(jax.devices()) < 2:
         pytest.skip("needs >1 host device")

@@ -1,13 +1,7 @@
 """End-to-end behaviour tests: the full train / serve / curate loops."""
-import json
-import os
-import subprocess
-import sys
-
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro import configs
 from repro.launch import train as train_mod
