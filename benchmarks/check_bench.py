@@ -112,12 +112,67 @@ def check_phase2(doc: dict):
                          f"{layout}/k={k}")
 
 
+def check_serve(doc: dict):
+    _require(doc.get("schema") == "serve-bench/v1",
+             f"serve: bad schema tag {doc.get('schema')!r}")
+    smoke = bool(doc.get("smoke", False))
+    rows = _typed(doc, "rows", list, "serve")
+    _require(len(rows) > 0, "serve: rows is empty")
+    layouts = _typed(doc, "layouts", dict, "serve")
+    _require(len(layouts) >= 3, "serve: fewer than 3 layouts")
+    seen = set()
+    for i, row in enumerate(rows):
+        ctx = f"serve.rows[{i}]"
+        layout = _typed(row, "layout", str, ctx)
+        _require(layout in layouts, f"{ctx}: unknown layout {layout!r}")
+        k = _typed(row, "shards", int, ctx)
+        _require(k >= 2, f"{ctx}: shards < 2")
+        for key in ("ingest_ms", "query_ms", "delta_refresh_ms",
+                    "full_refresh_ms"):
+            _require(_typed(row, key, (int, float), ctx) > 0,
+                     f"{ctx}: {key} <= 0")
+        delta = _typed(row, "delta_bytes", int, ctx)
+        full = _typed(row, "full_bytes", int, ctx)
+        _require(delta > 0, f"{ctx}: delta_bytes <= 0")
+        _require(_typed(row, "delta_bytes_int8", int, ctx) < delta,
+                 f"{ctx}: int8 wire footprint not smaller than f32")
+        b = _typed(row, "buffer_bytes", int, ctx)
+        _require(full >= k * b,
+                 f"{ctx}: full re-merge moved fewer than K buffers")
+        _require(_typed(row, "matches_host", bool, ctx) is True,
+                 f"{ctx}: streaming clustering diverged from ddc_host")
+        _require(_typed(row, "delta_equals_full", bool, ctx) is True,
+                 f"{ctx}: delta-maintained matrix != full rebuild")
+        if k >= 8:
+            _require(delta < full,
+                     f"{ctx}: delta-merge moved >= bytes than full "
+                     f"re-merge at {k} shards")
+        _require(_typed(row, "d2_pairs_delta", int, ctx)
+                 <= _typed(row, "d2_pairs_full", int, ctx),
+                 f"{ctx}: delta recomputed more slot pairs than full")
+        seen.add((layout, k))
+    for layout in layouts:
+        ks = {k for (lo, k) in seen if lo == layout}
+        _require(len(ks) > 0, f"serve: no rows for {layout}")
+        if not smoke:
+            _require(max(ks) >= 16,
+                     f"serve: {layout} never reaches 16 shards")
+    summary = _typed(doc, "summary", dict, "serve")
+    _require(summary.get("all_match_host") is True,
+             "serve.summary: all_match_host is not true")
+    _require(summary.get("delta_lt_full_at_high_shards") is True,
+             "serve.summary: delta-merge did not beat full re-merge")
+
+
 def check_file(path: str):
     with open(path) as f:
         doc = json.load(f)
     if doc.get("schema") == "phase2-bench/v1":
         check_phase2(doc)
         return "phase2"
+    if doc.get("schema") == "serve-bench/v1":
+        check_serve(doc)
+        return "serve"
     if "bt" in doc:
         check_phase1(doc)
         return "phase1"

@@ -47,6 +47,14 @@ def main() -> None:
 
     print()
     print("#" * 72)
+    print("# Streaming serve engine: delta-merge vs full re-merge "
+          "(BENCH_serve.json)")
+    print("#" * 72)
+    from benchmarks import serve
+    sv_rows = serve.run()
+
+    print()
+    print("#" * 72)
     print("# Kernel microbenches")
     print("#" * 72)
     k_rows = kernels.run(print_rows=False)
@@ -71,6 +79,10 @@ def main() -> None:
             derived += f"|sweepx={r['sweep_reduction']:.1f}"
         us = f"{r['ms_doubling']*1e3:.0f}" if "ms_doubling" in r else ""
         print(f"phase1_{r['scenario']}_{r['n']},{us},{derived}")
+    for r in sv_rows:
+        print(f"serve_{r['layout']}_k{r['shards']},{r['ingest_ms']*1e3:.0f},"
+              f"delta/full_bytes={r['delta_bytes']}/{r['full_bytes']}"
+              f"|query_us={r['query_ms']*1e3:.0f}")
     for r in k_rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
     for r in md_rows:

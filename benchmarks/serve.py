@@ -1,0 +1,195 @@
+"""Streaming serve-engine benchmark — the read/write latency and
+delta-merge comm-volume baseline.
+
+Four spatial layouts (the shared ``PHASE2_LAYOUTS`` table) × shard
+counts 2–16.  Per cell the service ingests the full layout in
+round-robin batches with an incremental refresh after every batch, then
+measures steady state:
+
+* **ingest_ms** — wall-clock of (ingest one batch + delta refresh);
+* **query_ms** — wall-clock of a 256-point query batch;
+* **delta vs full** — bytes on the wire and wall-clock for a
+  single-dirty-shard delta refresh against a from-scratch re-merge
+  (both exact, same global state — the delta path's whole point);
+* **matches_host** — the final streaming labels must reproduce batch
+  ``ddc_host`` on the live points bit-exactly (hard-fails otherwise),
+  and the delta-maintained distance matrix must equal the recomputed
+  one bit-for-bit (``delta_equals_full``).
+
+Writes ``BENCH_serve.json`` (schema ``serve-bench/v1``,
+``benchmarks/check_bench.py``).  ``--smoke`` trims the shard sweep for
+CI.  Unlike the phase benches this needs no device-count override: the
+engine is host-driven over logical shards.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.core import ddc
+from repro.data import spatial
+from repro.parallel import compress
+from repro.serve import ClusterService, StreamConfig
+
+
+def _parse_args(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny CI subset: 2/4 shards only")
+    p.add_argument("--out", default=None, help="output JSON path")
+    return p.parse_args(argv)
+
+
+N = 2048
+BATCH = 256
+QUERIES = 256
+LAYOUTS = spatial.PHASE2_LAYOUTS
+
+
+def bench_cell(name: str, spec: dict, k: int, reps: int = 3) -> dict:
+    pts = spec["make"](N)
+    cfg = ddc.DDCConfig(
+        eps=spec["eps"], min_pts=spec["min_pts"], grid=spec["grid"],
+        max_clusters=spec["max_clusters"], max_verts=spec["max_verts"])
+    cap = max(len(p) for p in np.array_split(np.arange(N), k))
+    batch = min(BATCH, cap)      # high shard counts shrink the buffers
+    meter = ddc.CommMeter()
+    svc = ClusterService(
+        StreamConfig(shards=k, capacity=cap, max_batch=batch, ddc=cfg),
+        meter=meter)
+
+    batches = spatial.stream_batches(pts, k, batch)
+    # First batch+refresh compiles everything; time the rest.
+    ingest_ms = []
+    for i, (shard, chunk) in enumerate(batches):
+        t0 = time.perf_counter()
+        svc.ingest(shard, chunk)
+        svc.refresh()
+        dt = (time.perf_counter() - t0) * 1e3
+        if i > 0:
+            ingest_ms.append(dt)
+
+    # Steady-state single-dirty-shard delta refresh vs full re-merge.
+    # Re-ingesting a duplicate point keeps the stream live; the final
+    # equivalence check below runs on whatever is live, so duplicates
+    # are counted on both sides.
+    meter.reset()
+    svc.ingest(0, pts[:1])
+    svc.refresh()
+    delta_bytes = meter.snapshot()["bytes_total"]
+    delta_ms = min_time(lambda: (svc.ingest(0, pts[:1]), svc.refresh()), reps)
+
+    # Exactness: the delta-maintained matrix vs a from-scratch rebuild of
+    # the SAME state, then time the full path.
+    d2_delta = np.asarray(svc.pair_d2)
+    meter.reset()
+    svc.remerge_full()
+    full_bytes = meter.snapshot()["bytes_total"]
+    d2_full = np.asarray(svc.pair_d2)
+    full_ms = min_time(svc.remerge_full, reps)
+
+    rng = np.random.default_rng(0)
+    q = rng.uniform(0, 1, (QUERIES, 2)).astype(np.float32)
+    svc.query(q)   # compile
+    query_ms = min_time(lambda: svc.query(q), reps)
+
+    live_pts, parts, labels = svc.live()
+    host_labels, _, _ = ddc.ddc_host(
+        live_pts, len(parts), spec["eps"], spec["min_pts"],
+        partition=parts, contour="grid")
+
+    return {
+        "layout": name,
+        "shards": k,
+        "n_live": int(len(live_pts)),
+        "ingest_ms": round(float(np.mean(ingest_ms)), 2),
+        "query_ms": round(query_ms, 2),
+        "delta_refresh_ms": round(delta_ms, 2),
+        "full_refresh_ms": round(full_ms, 2),
+        "delta_bytes": delta_bytes,
+        "full_bytes": full_bytes,
+        "delta_bytes_int8": compress.pytree_wire_bytes_int8(svc.local_set(0))
+        + k * cfg.max_clusters * 4,
+        "buffer_bytes": cfg.buffer_bytes(),
+        "d2_pairs_delta": cfg.max_clusters * k * cfg.max_clusters,
+        "d2_pairs_full": (k * cfg.max_clusters) ** 2,
+        "n_clusters": int(np.asarray(svc.global_set.valid).sum()),
+        "matches_host": ddc.same_clustering(labels, host_labels),
+        "delta_equals_full": bool(np.array_equal(d2_delta, d2_full)),
+    }
+
+
+def min_time(fn, reps: int) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, (time.perf_counter() - t0) * 1e3)
+    return best
+
+
+def run(smoke: bool = False, out_path: str | None = None,
+        print_rows: bool = True):
+    shards = (2, 4) if smoke else (2, 4, 8, 16)
+    rows = []
+    layouts_meta = {}
+    for name, spec in LAYOUTS.items():
+        layouts_meta[name] = {
+            key: spec[key] for key in ("eps", "min_pts", "grid", "max_verts",
+                                       "max_clusters")
+        } | {"n": N}
+        for k in shards:
+            row = bench_cell(name, spec, k)
+            rows.append(row)
+            if print_rows:
+                print(f"serve_{name}_k{k}: ingest={row['ingest_ms']}ms "
+                      f"query={row['query_ms']}ms "
+                      f"delta={row['delta_bytes']}B/{row['delta_refresh_ms']}ms "
+                      f"full={row['full_bytes']}B/{row['full_refresh_ms']}ms "
+                      f"match={row['matches_host']}")
+
+    all_match = all(r["matches_host"] and r["delta_equals_full"] for r in rows)
+    high_k = [r for r in rows if r["shards"] >= 8]
+    summary = {
+        "all_match_host": all_match,
+        "n_layouts": len(LAYOUTS),
+        "max_shards": max(shards),
+        "delta_lt_full_at_high_shards": all(
+            r["delta_bytes"] < r["full_bytes"] for r in high_k) or not high_k,
+        "mean_full_over_delta_bytes": round(float(np.mean(
+            [r["full_bytes"] / r["delta_bytes"] for r in rows])), 2),
+    }
+    out = {
+        "schema": "serve-bench/v1",
+        "smoke": bool(smoke),
+        "n": N,
+        "batch": BATCH,
+        "shards": list(shards),
+        "layouts": layouts_meta,
+        "rows": rows,
+        "summary": summary,
+    }
+    if out_path is None:
+        out_path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_serve.json")
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+    if print_rows:
+        print("summary:", json.dumps(summary))
+        print("wrote", out_path)
+    if not all_match or not summary["delta_lt_full_at_high_shards"]:
+        bad = [(r["layout"], r["shards"]) for r in rows
+               if not (r["matches_host"] and r["delta_equals_full"])]
+        print("SERVE BENCH FAILED:", bad, file=sys.stderr)
+        raise SystemExit(1)
+    return rows
+
+
+if __name__ == "__main__":
+    _args = _parse_args()
+    run(smoke=_args.smoke, out_path=_args.out)

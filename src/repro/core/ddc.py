@@ -208,26 +208,96 @@ def _components(overlap: jax.Array, valid: jax.Array) -> jax.Array:
     return labels
 
 
+def contour_pair_d2(batch: ClusterSet, cfg: DDCConfig) -> jax.Array:
+    """The (K·C, K·C) slot×slot min-contour-distance matrix of a stacked
+    ClusterSet batch — one kernel call (``ops.contour_min_d2``), no
+    per-pair row scans.  Factored out of ``merge_many`` so the streaming
+    delta path (serve/cluster_service.py) can cache it and refresh only
+    dirty rows/columns (``update_pair_d2``)."""
+    c, v = cfg.max_clusters, cfg.max_verts
+    m = batch.valid.shape[0] * c
+    return ops.contour_min_d2(
+        batch.contours.reshape(m, v, 2),
+        batch.counts.reshape(m),
+        batch.valid.reshape(m),
+    )
+
+
+def cross_min_d2(ca: jax.Array, cnta: jax.Array, va: jax.Array,
+                 cb: jax.Array, cntb: jax.Array, vb: jax.Array) -> jax.Array:
+    """Rectangular min squared distance between two padded contour
+    buffers: (A, V, 2) × (B, V, 2) → (A, B), 1e30 where either slot is
+    empty.  Memory-bounded (one A-row at a time) and written in the same
+    difference form as ``kernels/ref.py::contour_min_d2``, so a row
+    computed here is bit-identical to the corresponding row of the full
+    matrix on the reference backend — the invariant the delta-merge
+    exactness argument rests on (DESIGN.md §8)."""
+    a, v, _ = ca.shape
+    b = cb.shape[0]
+    pa = geometry.vert_validity(cnta, va, v)                    # (A, V)
+    pb = geometry.vert_validity(cntb, vb, v).reshape(b * v)     # (B·V,)
+    flat = cb.astype(jnp.float32).reshape(b * v, 2)
+    pts = ca.astype(jnp.float32)
+
+    def row(i):
+        d2 = jnp.sum((pts[i][:, None, :] - flat[None, :, :]) ** 2, axis=-1)
+        d2 = jnp.where(pa[i][:, None] & pb[None, :], d2, geometry.BIG)
+        return jnp.min(d2.reshape(v, b, v), axis=(0, 2))        # (B,)
+
+    return jax.lax.map(row, jnp.arange(a))
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def merge_many(batch: ClusterSet, cfg: DDCConfig) -> Tuple[ClusterSet, jax.Array]:
-    """Fold an arbitrary batch of ClusterSets into one (the paper's
-    polygon-overlay step, batched).
+def contour_pair_d2_exact(batch: ClusterSet, cfg: DDCConfig) -> jax.Array:
+    """``contour_pair_d2`` in the difference form on every backend.
 
-    ``batch``: a ClusterSet whose leaves carry a leading stack axis —
-    contours (K, C, V, 2), counts/sizes/valid (K, C), overflow (K,).  All
-    K·C slots are merged in one shot: the slot×slot min-distance matrix
-    comes from one kernel call (``ops.contour_min_d2``), components are
-    the transitive closure of the overlap predicate (contours within
-    ``merge_radius`` — the TPU-friendly stand-in for exact polygon
-    intersection, DESIGN.md §3/§7; the host oracle uses the exact test),
-    and merged contours are re-extracted once per output slot.
+    The kernel path behind ``contour_pair_d2`` matches the reference only
+    within tolerance on TPU (centred MXU expansion), while the delta
+    patches (``update_pair_d2``) are always difference-form — mixing the
+    two in one cached matrix would break the streaming engine's
+    bit-exactness contract near the merge threshold.  The engine
+    therefore builds its full matrix here: same math, backend-stable, and
+    bit-identical to the rows ``cross_min_d2`` patches in later."""
+    c, v = cfg.max_clusters, cfg.max_verts
+    m = batch.valid.shape[0] * c
+    contours = batch.contours.reshape(m, v, 2)
+    counts = batch.counts.reshape(m)
+    valid = batch.valid.reshape(m)
+    return cross_min_d2(contours, counts, valid, contours, counts, valid)
 
-    Returns (merged, maps) where maps (K, C) sends every input slot to
-    its output slot (or -1) so each contributor can relabel its points
-    locally.  Deterministic and order-equivariant: permuting the batch
-    permutes ``maps`` rows but yields the identical merged clustering
-    (components are ranked by total member count, ties by slot index).
-    """
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0,))
+def update_pair_d2(pair_d2: jax.Array, batch: ClusterSet, shard,
+                   cfg: DDCConfig) -> jax.Array:
+    """Refresh one shard's rows + columns of a cached slot×slot distance
+    matrix after that shard's ClusterSet changed (the streaming
+    delta-merge path: O(C·M·V²) work instead of the full O(M²·V²)
+    rebuild).  ``shard`` may be a traced index, so one compilation serves
+    every dirty shard.  d2 is symmetric under IEEE ((a−b)² == (b−a)²), so
+    mirroring the freshly computed rows into the columns keeps the matrix
+    bit-identical to ``contour_pair_d2`` recomputed from scratch."""
+    c, v = cfg.max_clusters, cfg.max_verts
+    m = batch.valid.shape[0] * c
+    contours = batch.contours.reshape(m, v, 2)
+    counts = batch.counts.reshape(m)
+    valid = batch.valid.reshape(m)
+    row0 = shard * c
+    bc = jax.lax.dynamic_slice(contours, (row0, 0, 0), (c, v, 2))
+    bcnt = jax.lax.dynamic_slice(counts, (row0,), (c,))
+    bval = jax.lax.dynamic_slice(valid, (row0,), (c,))
+    rows = cross_min_d2(bc, bcnt, bval, contours, counts, valid)   # (C, M)
+    pair_d2 = jax.lax.dynamic_update_slice(pair_d2, rows, (row0, 0))
+    return jax.lax.dynamic_update_slice(pair_d2, rows.T, (0, row0))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def merge_from_d2(batch: ClusterSet, pair_d2: jax.Array,
+                  cfg: DDCConfig) -> Tuple[ClusterSet, jax.Array]:
+    """The merge fold given a precomputed slot×slot distance matrix:
+    overlap predicate → transitive closure → ranked rebuild.  Everything
+    downstream of the matrix is a pure function of (batch, pair_d2), so
+    feeding a cached-and-patched matrix (streaming delta path) yields the
+    exact same global clustering as a from-scratch ``merge_many``."""
     c, v = cfg.max_clusters, cfg.max_verts
     k = batch.valid.shape[0]
     m = k * c
@@ -235,9 +305,6 @@ def merge_many(batch: ClusterSet, cfg: DDCConfig) -> Tuple[ClusterSet, jax.Array
     counts = batch.counts.reshape(m)
     sizes = batch.sizes.reshape(m)
     valid = batch.valid.reshape(m)
-
-    # Full slot×slot proximity matrix in one shot (no per-pair row scans).
-    pair_d2 = ops.contour_min_d2(contours, counts, valid)      # (M, M)
     r = cfg.merge_radius
     overlap = (pair_d2 <= r * r) & valid[:, None] & valid[None, :]
     overlap = overlap | (jnp.eye(m, dtype=bool) & valid[:, None])
@@ -287,6 +354,30 @@ def merge_many(batch: ClusterSet, cfg: DDCConfig) -> Tuple[ClusterSet, jax.Array
         overflow=overflow,
     )
     return merged, slot_of_old.reshape(k, c)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def merge_many(batch: ClusterSet, cfg: DDCConfig) -> Tuple[ClusterSet, jax.Array]:
+    """Fold an arbitrary batch of ClusterSets into one (the paper's
+    polygon-overlay step, batched).
+
+    ``batch``: a ClusterSet whose leaves carry a leading stack axis —
+    contours (K, C, V, 2), counts/sizes/valid (K, C), overflow (K,).  All
+    K·C slots are merged in one shot: the slot×slot min-distance matrix
+    comes from one kernel call (``contour_pair_d2``), components are
+    the transitive closure of the overlap predicate (contours within
+    ``merge_radius`` — the TPU-friendly stand-in for exact polygon
+    intersection, DESIGN.md §3/§7; the host oracle uses the exact test),
+    and merged contours are re-extracted once per output slot
+    (``merge_from_d2``).
+
+    Returns (merged, maps) where maps (K, C) sends every input slot to
+    its output slot (or -1) so each contributor can relabel its points
+    locally.  Deterministic and order-equivariant: permuting the batch
+    permutes ``maps`` rows but yields the identical merged clustering
+    (components are ranked by total member count, ties by slot index).
+    """
+    return merge_from_d2(batch, contour_pair_d2(batch, cfg), cfg)
 
 
 def merge_pair(
@@ -593,14 +684,22 @@ def ddc_host(
     """Reference DDC on the host: dbscan_ref per partition, exact
     polygon-overlap merge (paper's phase-2 predicate).
 
+    ``partition``: "block" (contiguous array_split), "strided", or an
+    explicit list of index arrays (one per shard — the streaming serve
+    tests hand over the engine's exact per-shard membership, including
+    holes left by eviction; ``n_partitions`` is ignored then).
+
     Returns (global labels (n,), list of merged-cluster polygons,
     exchanged_points: how many contour vertices crossed the 'network' —
     drives the 1–2 % exchange claim).
     """
     n = len(points)
-    parts = np.array_split(np.arange(n), n_partitions) if partition == "block" else [
-        np.arange(n)[i::n_partitions] for i in range(n_partitions)
-    ]
+    if isinstance(partition, (list, tuple)):
+        parts = [np.asarray(p, dtype=np.int64) for p in partition]
+    elif partition == "block":
+        parts = np.array_split(np.arange(n), n_partitions)
+    else:
+        parts = [np.arange(n)[i::n_partitions] for i in range(n_partitions)]
     labels = np.full(n, -1, np.int64)
     polys: list = []       # (part, local_cluster, polygon, member_idx)
     exchanged = 0

@@ -1,8 +1,19 @@
-"""Serving driver: batched request loop over prefill + decode.
+"""Serving drivers.
 
-CPU-scale example:
+Two modes behind one entry point:
+
+* ``--mode lm`` (default) — batched LM request loop over prefill + decode.
+* ``--mode ddc`` — the streaming spatial-clustering service
+  (serve/cluster_service.py): ingest a synthetic layout shard-by-shard
+  with an incremental delta-merge refresh after every batch, then serve
+  point->cluster queries.  Prints a JSON line of ingest/query latency and
+  delta-path comm volume.
+
+CPU-scale examples:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --tiny \
       --requests 4 --prompt-len 32 --gen 16
+  PYTHONPATH=src python -m repro.launch.serve --mode ddc --layout rings \
+      --shards 8 --queries 512
 """
 from __future__ import annotations
 
@@ -13,15 +24,12 @@ import time
 import jax
 import numpy as np
 
-from repro import configs
-from repro.launch import mesh as mesh_mod
-from repro.parallel import api as par
-from repro.serve import engine
-
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--mode", choices=("lm", "ddc"), default="lm")
+    # LM mode
+    ap.add_argument("--arch")
     ap.add_argument("--tiny", action="store_true")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -29,7 +37,71 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--mesh-devices", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    # DDC streaming mode
+    ap.add_argument("--layout", default="rings",
+                    help="a data/spatial.py PHASE2_LAYOUTS name")
+    ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--n", type=int, default=2048)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--queries", type=int, default=256)
     args = ap.parse_args(argv)
+    if args.mode == "ddc":
+        return serve_ddc(args)
+    if not args.arch:
+        ap.error("--arch is required for --mode lm")
+    return serve_lm(args)
+
+
+def serve_ddc(args):
+    from repro.core import ddc
+    from repro.data import spatial
+    from repro.serve import ClusterService, StreamConfig
+
+    spec = spatial.PHASE2_LAYOUTS[args.layout]
+    pts = spec["make"](args.n)
+    cfg = ddc.DDCConfig(
+        eps=spec["eps"], min_pts=spec["min_pts"], grid=spec["grid"],
+        max_clusters=spec["max_clusters"], max_verts=spec["max_verts"])
+    cap = max(len(p) for p in np.array_split(np.arange(args.n), args.shards))
+    batch = min(args.batch, cap)
+    meter = ddc.CommMeter()
+    svc = ClusterService(
+        StreamConfig(shards=args.shards, capacity=cap, max_batch=batch,
+                     ddc=cfg),
+        meter=meter)
+
+    t0 = time.time()
+    n_batches = 0
+    for shard, chunk in spatial.stream_batches(pts, args.shards, batch):
+        svc.ingest(shard, chunk)
+        svc.refresh()
+        n_batches += 1
+    ingest_s = time.time() - t0
+
+    rng = np.random.default_rng(args.seed)
+    q = rng.uniform(0, 1, (args.queries, 2)).astype(np.float32)
+    svc.query(q[:1])           # compile
+    t0 = time.time()
+    labels = svc.query(q)
+    query_s = time.time() - t0
+
+    out = svc.stats() | {
+        "mode": "ddc",
+        "layout": args.layout,
+        "ingest_batches": n_batches,
+        "ingest_ms_per_batch": round(ingest_s / max(n_batches, 1) * 1e3, 2),
+        "query_ms": round(query_s * 1e3, 2),
+        "query_clustered_frac": round(float(np.mean(labels >= 0)), 3),
+    }
+    print(json.dumps(out))
+    return out
+
+
+def serve_lm(args):
+    from repro import configs
+    from repro.launch import mesh as mesh_mod
+    from repro.parallel import api as par
+    from repro.serve import engine
 
     cfg = configs.get_config(args.arch)
     if args.tiny:

@@ -43,6 +43,29 @@ def pytree_wire_bytes(tree) -> int:
     return total
 
 
+def pytree_wire_bytes_int8(tree) -> int:
+    """Prospective wire footprint if every float leaf shipped as int8
+    with one f32 absmax scale per leading-axis row — a finer-grained
+    variant of ``quantize_int8`` (which uses a single scale per array):
+    per-row scales are what contour buffers would need, since cluster
+    extents differ by orders of magnitude.  Integer/bool leaves are
+    unchanged.  The streaming DDC delta path reports this as the
+    achievable floor for shipping dirty ClusterSets — metered only, since
+    quantised contours would break the bit-exactness contract unless both
+    the sender's and the aggregator's predicate see the same rounding.
+    """
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        shape = getattr(leaf, "shape", ())
+        dtype = np.dtype(getattr(leaf, "dtype", np.float32))
+        n = int(np.prod(shape, dtype=np.int64))
+        if np.issubdtype(dtype, np.floating):
+            total += n + 4 * (int(shape[0]) if shape else 1)
+        else:
+            total += n * dtype.itemsize
+    return total
+
+
 def quantize_int8(x: jax.Array):
     absmax = jnp.max(jnp.abs(x)) + 1e-12
     scale = absmax / 127.0

@@ -1,1 +1,15 @@
-"""Package."""
+"""Serving substrates: the LM prefill/decode engine (engine.py) and the
+streaming DDC cluster service (cluster_service.py).
+
+The cluster-service re-export is lazy (PEP 562) so importing the LM
+engine does not drag in the whole clustering stack, and vice versa.
+"""
+
+_CLUSTER_EXPORTS = ("ClusterService", "StreamConfig")
+
+
+def __getattr__(name):
+    if name in _CLUSTER_EXPORTS:
+        from repro.serve import cluster_service
+        return getattr(cluster_service, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

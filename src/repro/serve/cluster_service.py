@@ -1,0 +1,378 @@
+"""Streaming DDC serve engine: incremental ingest, delta-merge, queries.
+
+The paper's two-phase split (local clustering, then contour-only
+aggregation) is what makes an *online* clustering service cheap: when new
+points land on one shard, only that shard's local clusters change, and
+the global view is repaired by re-merging just the touched contours — no
+bulk data exchange.  This module is that serving path:
+
+* **Ingest buffers** — every shard owns a static-shape ring buffer
+  ((capacity, 2) points + live mask), donated to the jitted append kernel
+  so updates are in-place on device.  Appending past capacity evicts the
+  oldest points (ring overwrite); ``evict_oldest`` is the explicit
+  eviction API.  The append kernel branches under ``lax.cond`` between a
+  contiguous fast path (no wraparound: one ``dynamic_update_slice``) and
+  the general wrap/evict scatter.
+* **Dirty-shard phase 1** — ``refresh`` re-runs ``ddc.local_phase`` only
+  on shards whose buffers changed since the last refresh; an emptied
+  shard short-circuits to the cached ``ddc.empty_clusterset`` without
+  touching the device.
+* **Delta-merge phase 2** — the engine caches the per-shard ClusterSets
+  *and* the (K·C, K·C) slot×slot contour-distance matrix behind
+  ``ddc.merge_many``.  A delta refresh recomputes only the dirty shards'
+  rows/columns (``ddc.update_pair_d2``) and re-closes the transitive
+  closure (``ddc.merge_from_d2``).  This is **exact**, not approximate:
+  the matrix is a pure per-slot-pair function of the per-shard contours,
+  so patching dirty rows/columns reproduces the from-scratch matrix
+  bit-for-bit, and everything downstream (components, ranking, contour
+  rebuild) is a deterministic function of (batch, matrix).  In
+  particular, evictions that *split* a global cluster are handled
+  correctly — the closure is always recomputed over per-shard contours,
+  never over the (unsplittable) merged global contour.  DESIGN.md §8.
+* **Queries** — ``query`` maps read-traffic points to global cluster ids:
+  nearest clustered live point within ``eps`` (DBSCAN's border rule
+  applied to the frozen clustering), else noise.
+
+Communication model (``CommMeter``): shards and the aggregator are
+distinct nodes.  A full re-merge ships all K ClusterSets up
+(K·B bytes, B = ``DDCConfig.buffer_bytes()``); a delta refresh ships only
+the dirty ones (|dirty|·B).  Both ship each shard its (C,) slot-map row
+back down (K·C·4 bytes).  Steady-state single-shard ingest therefore
+moves B + K·C·4 per refresh vs K·B + K·C·4 — the measurable
+minimal-communication claim (benchmarks/serve.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ddc
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Static configuration of the streaming engine."""
+
+    shards: int                     # K logical shards
+    capacity: int                   # per-shard point-buffer slots
+    max_batch: int = 256            # static ingest width (host pads)
+    max_queries: int = 256          # static query width (host pads)
+    merge_mode: str = "delta"       # "delta" | "full"
+    ddc: ddc.DDCConfig = dataclasses.field(default_factory=ddc.DDCConfig)
+
+
+# ---------------------------------------------------------------------------
+# Jitted state-update kernels (static shapes; buffers donated)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _append(pts_buf, mask_buf, head, count, batch, nb):
+    """Ring-buffer append of ``nb`` valid rows of ``batch``.
+
+    ``lax.cond`` picks between the contiguous fast path (the batch window
+    fits before the buffer end and nothing live is overwritten: one
+    dynamic_update_slice) and the general wraparound path (modulo
+    scatter), which is also the eviction path — slots wrapped onto are
+    the oldest live points and are overwritten in place.
+    """
+    cap = pts_buf.shape[0]
+    bmax = batch.shape[0]
+    wvalid = jnp.arange(bmax) < nb
+
+    def fast(bufs):
+        pts, msk = bufs
+        wpts = jax.lax.dynamic_slice(pts, (head, 0), (bmax, 2))
+        wmsk = jax.lax.dynamic_slice(msk, (head,), (bmax,))
+        pts = jax.lax.dynamic_update_slice(
+            pts, jnp.where(wvalid[:, None], batch, wpts), (head, 0))
+        msk = jax.lax.dynamic_update_slice(msk, wmsk | wvalid, (head,))
+        return pts, msk
+
+    def wrap_evict(bufs):
+        pts, msk = bufs
+        idx = (head + jnp.arange(bmax)) % cap
+        safe = jnp.where(wvalid, idx, cap)           # invalid rows drop
+        pts = pts.at[safe].set(batch, mode="drop")
+        msk = msk.at[safe].set(True, mode="drop")
+        return pts, msk
+
+    fits = (head + bmax <= cap) & (count + nb <= cap)
+    pts_buf, mask_buf = jax.lax.cond(fits, fast, wrap_evict,
+                                     (pts_buf, mask_buf))
+    return pts_buf, mask_buf
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _kill_oldest(mask_buf, tail, n):
+    """Clear the live bit of the ``n`` oldest slots (ring order)."""
+    cap = mask_buf.shape[0]
+    idx = (tail + jnp.arange(cap)) % cap
+    safe = jnp.where(jnp.arange(cap) < n, idx, cap)
+    return mask_buf.at[safe].set(False, mode="drop")
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _set_row(stack, row, i):
+    """stack[i] <- row for every leaf of a stacked pytree (in place)."""
+    return jax.tree.map(
+        lambda s, x: jax.lax.dynamic_update_slice(
+            s, x[None], (i,) + (0,) * x.ndim),
+        stack, row)
+
+
+@jax.jit
+def _global_labels(dense, mask, maps):
+    """(K, cap) dense local labels + (K, C) slot maps -> global labels."""
+    def one(d, m, mp):
+        return jnp.where(m & (d >= 0), mp[jnp.clip(d, 0)], -1)
+    return jax.vmap(one)(dense, mask, maps)
+
+
+@jax.jit
+def _query_labels(q, qn, pts, mask, glabels, eps):
+    """Nearest clustered live point within eps, else -1.  q: (Qmax, 2)."""
+    flat = pts.reshape(-1, 2)
+    ok = (mask & (glabels >= 0)).reshape(-1)
+    d2 = jnp.sum((q[:, None, :] - flat[None, :, :]) ** 2, axis=-1)
+    d2 = jnp.where(ok[None, :], d2, jnp.float32(1e30))
+    j = jnp.argmin(d2, axis=1)
+    hit = d2[jnp.arange(q.shape[0]), j] <= eps * eps
+    lab = jnp.where(hit, glabels.reshape(-1)[j], -1)
+    return jnp.where(jnp.arange(q.shape[0]) < qn, lab, -1)
+
+
+# ---------------------------------------------------------------------------
+# The service
+# ---------------------------------------------------------------------------
+
+
+class ClusterService:
+    """Host-driven streaming DDC engine over K logical shards.
+
+    Write path: ``ingest(shard, points)`` appends into the shard's ring
+    buffer (evicting the oldest on overflow) and marks it dirty;
+    ``refresh()`` re-clusters dirty shards and delta-merges them into the
+    cached global state.  Read path: ``query(points)`` returns global
+    cluster ids against the last refreshed state (auto-refreshing if
+    writes are pending).  All device state is static-shape, so every
+    kernel compiles once per (StreamConfig) and is reused for the
+    lifetime of the service.
+    """
+
+    def __init__(self, scfg: StreamConfig, meter: ddc.CommMeter | None = None):
+        if scfg.merge_mode not in ("delta", "full"):
+            raise ValueError(scfg.merge_mode)
+        if scfg.capacity < scfg.max_batch:
+            raise ValueError(
+                f"capacity {scfg.capacity} < max_batch {scfg.max_batch}: an "
+                f"append chunk could overwrite itself in the ring scatter")
+        self.scfg = scfg
+        self.cfg = scfg.ddc
+        self.meter = meter
+        k, cap = scfg.shards, scfg.capacity
+        self._pts: List[jax.Array] = [
+            jnp.zeros((cap, 2), jnp.float32) for _ in range(k)]
+        self._mask: List[jax.Array] = [jnp.zeros((cap,), bool) for _ in range(k)]
+        # Host mirrors of the ring state (known exactly from the call
+        # sequence — no device sync on the write path).
+        self._head = [0] * k
+        self._count = [0] * k
+        self._dirty = set(range(k))
+        empty = ddc.empty_clusterset(self.cfg)
+        self._local: List[ddc.ClusterSet] = [empty] * k
+        self._batch: ddc.ClusterSet = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (k,) + x.shape), empty)
+        self._dense = jnp.full((k, cap), -1, jnp.int32)
+        self._pair_d2: Optional[jax.Array] = None
+        self._global: Optional[ddc.ClusterSet] = None
+        self._maps: Optional[jax.Array] = None
+        self._glabels = jnp.full((k, cap), -1, jnp.int32)
+        self._stacked: Optional[Tuple[jax.Array, jax.Array]] = None
+        self.refreshes = 0
+        self.delta_refreshes = 0
+
+    # -- write path --------------------------------------------------------
+
+    def ingest(self, shard: int, points: np.ndarray) -> None:
+        """Append ``points`` (n, 2) to ``shard``'s buffer, evicting the
+        oldest live points if the buffer would overflow."""
+        cap, bmax = self.scfg.capacity, self.scfg.max_batch
+        pts = np.asarray(points, np.float32).reshape(-1, 2)
+        for off in range(0, len(pts), bmax):
+            chunk = pts[off:off + bmax]
+            nb = len(chunk)
+            if nb < bmax:
+                chunk = np.pad(chunk, ((0, bmax - nb), (0, 0)))
+            self._pts[shard], self._mask[shard] = _append(
+                self._pts[shard], self._mask[shard],
+                self._head[shard], self._count[shard], jnp.asarray(chunk), nb)
+            self._head[shard] = (self._head[shard] + nb) % cap
+            self._count[shard] = min(self._count[shard] + nb, cap)
+        if len(pts):
+            self._dirty.add(shard)
+            self._stacked = None
+
+    def evict_oldest(self, shard: int, n: int) -> int:
+        """Evict the ``n`` oldest live points from ``shard``.  Returns the
+        number actually evicted."""
+        n = min(n, self._count[shard])
+        if n == 0:
+            return 0
+        cap = self.scfg.capacity
+        tail = (self._head[shard] - self._count[shard]) % cap
+        self._mask[shard] = _kill_oldest(self._mask[shard], tail, n)
+        self._count[shard] -= n
+        self._dirty.add(shard)
+        self._stacked = None
+        return n
+
+    def clear(self, shard: int) -> int:
+        """Evict every live point from ``shard``."""
+        return self.evict_oldest(shard, self._count[shard])
+
+    # -- refresh (phase 1 on dirty shards + delta/full merge) --------------
+
+    def refresh(self, mode: str | None = None, force: bool = False):
+        """Re-cluster dirty shards and fold them into the global state.
+
+        ``mode`` overrides the configured merge mode for this call;
+        ``force`` recomputes even with no dirty shards (the full-remerge
+        baseline the benchmark times).  Returns the global ClusterSet.
+        """
+        mode = mode or self.scfg.merge_mode
+        cfg = self.cfg
+        k, c = self.scfg.shards, cfg.max_clusters
+        dirty = sorted(self._dirty)
+        if not dirty and self._global is not None and not force:
+            return self._global
+
+        for i in dirty:
+            if self._count[i] == 0:
+                # Emptied shard: the cached all-invalid ClusterSet, no
+                # phase-1 work (extends the PR 2 empty-shard fix).
+                cs = ddc.empty_clusterset(cfg)
+                dense = jnp.full((self.scfg.capacity,), -1, jnp.int32)
+            else:
+                dense, cs = ddc.local_phase(self._pts[i], self._mask[i], cfg)
+            self._local[i] = cs
+            self._batch = _set_row(self._batch, cs, i)
+            self._dense = _set_row(self._dense, dense, i)
+
+        bbytes = cfg.buffer_bytes()
+        if mode == "delta" and self._pair_d2 is not None:
+            for i in dirty:
+                self._pair_d2 = ddc.update_pair_d2(
+                    self._pair_d2, self._batch, i, cfg)
+            if self.meter is not None:
+                self.meter.add_collective(len(dirty), bbytes)
+            self.delta_refreshes += 1
+        else:
+            # Difference-form build (not the Pallas kernel): the cached
+            # matrix must stay bit-compatible with the delta patches on
+            # every backend — see ddc.contour_pair_d2_exact.
+            self._pair_d2 = ddc.contour_pair_d2_exact(self._batch, cfg)
+            if self.meter is not None:
+                self.meter.add_collective(k, bbytes)
+        if self.meter is not None:
+            self.meter.add_merge(k, c)
+            self.meter.add_collective(k, c * 4)   # per-shard map rows down
+        self._global, self._maps = ddc.merge_from_d2(
+            self._batch, self._pair_d2, cfg)
+        self._glabels = _global_labels(
+            self._dense, jnp.stack(self._mask), self._maps)
+        self._dirty.clear()
+        self.refreshes += 1
+        return self._global
+
+    def remerge_full(self):
+        """Recompute the global state from scratch (the baseline the
+        delta path is measured against).  Exactness contract: the result
+        is bit-identical to the incrementally maintained state."""
+        return self.refresh(mode="full", force=True)
+
+    # -- read path ---------------------------------------------------------
+
+    def query(self, points: np.ndarray) -> np.ndarray:
+        """Global cluster id for each query point: the label of the
+        nearest clustered live point within ``eps`` (DBSCAN's border
+        rule against the frozen clustering), else -1."""
+        if self._dirty or self._global is None:
+            self.refresh()
+        qmax = self.scfg.max_queries
+        q = np.asarray(points, np.float32).reshape(-1, 2)
+        out = np.empty((len(q),), np.int32)
+        if self._stacked is None:     # invalidated by ingest/evict
+            self._stacked = (jnp.stack(self._pts), jnp.stack(self._mask))
+        pts, mask = self._stacked
+        for off in range(0, len(q), qmax):
+            chunk = q[off:off + qmax]
+            nq = len(chunk)
+            if nq < qmax:
+                chunk = np.pad(chunk, ((0, qmax - nq), (0, 0)))
+            lab = _query_labels(jnp.asarray(chunk), nq, pts, mask,
+                                self._glabels, self.cfg.eps)
+            out[off:off + nq] = np.asarray(lab)[:nq]
+        return out
+
+    # -- introspection -----------------------------------------------------
+
+    def local_set(self, shard: int) -> ddc.ClusterSet:
+        return self._local[shard]
+
+    @property
+    def pair_d2(self) -> Optional[jax.Array]:
+        """Snapshot (copy) of the cached slot-distance matrix.  The live
+        buffer is donated to the next delta refresh, so handing out a
+        reference would leave callers holding a deleted array."""
+        return None if self._pair_d2 is None else jnp.array(self._pair_d2)
+
+    @property
+    def global_set(self) -> Optional[ddc.ClusterSet]:
+        return self._global
+
+    def n_live(self) -> int:
+        return sum(self._count)
+
+    def live(self) -> Tuple[np.ndarray, List[np.ndarray], np.ndarray]:
+        """Materialise the live state for host-side checks.
+
+        Returns (points (L, 2), parts, labels (L,)): ``parts[s]`` indexes
+        the rows of ``points`` held by shard ``s`` — exactly the explicit
+        partition ``ddc.ddc_host`` accepts, so streaming≡batch
+        equivalence is checked on identical per-shard memberships.
+        """
+        if self._dirty or self._global is None:
+            self.refresh()
+        pts_rows, parts, labels = [], [], []
+        base = 0
+        for s in range(self.scfg.shards):
+            msk = np.asarray(self._mask[s])
+            live = np.asarray(self._pts[s])[msk]
+            labs = np.asarray(self._glabels[s])[msk]
+            pts_rows.append(live)
+            labels.append(labs)
+            parts.append(np.arange(base, base + len(live)))
+            base += len(live)
+        return (np.concatenate(pts_rows) if base else np.zeros((0, 2), np.float32),
+                parts,
+                np.concatenate(labels) if base else np.zeros((0,), np.int32))
+
+    def stats(self) -> dict:
+        out = {
+            "shards": self.scfg.shards,
+            "capacity": self.scfg.capacity,
+            "n_live": self.n_live(),
+            "refreshes": self.refreshes,
+            "delta_refreshes": self.delta_refreshes,
+            "n_clusters": int(np.asarray(self._global.valid).sum())
+            if self._global is not None else 0,
+        }
+        if self.meter is not None:
+            out["comm"] = self.meter.snapshot()
+        return out

@@ -1,0 +1,201 @@
+"""Contour/geometry property tests (DESIGN.md §3/§7 made executable).
+
+Invariants of the grid-contour extraction that the phase-2 merge and the
+streaming serve engine lean on:
+
+* **Translation / scale equivariance** — translating (or scaling) points
+  AND bounds together translates (scales) the contour exactly.  Points
+  live on a dyadic lattice and grids are 2^k+1 (so the raster pitch is a
+  power of two): every intermediate float op is exact, hence the
+  assertions are bit-level, not approximate.
+* **Vertex budget** — the contour never exceeds ``max_verts``, padding
+  rows are zeroed, the reported count equals the true boundary-cell count
+  clipped to the budget, and every emitted vertex is a boundary-cell
+  centre of the NumPy oracle (``grid_contour_np``).
+* **Merged-contour containment** — ``merge_many`` re-extracts merged
+  contours from the union of member contour vertices on the same global
+  raster; rasterising a cell centre is idempotent, so every merged vertex
+  must be one of the input vertices and the merged count can never exceed
+  the sum of the inputs (the §7 sizing rule: if the union fits the
+  budget, nothing is silently dropped).
+
+Each property runs both hypothesis-driven (when installed) and over a
+fixed deterministic sweep, so the module asserts real work either way.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ddc, geometry
+
+from _hyp import given, settings, st  # optional-hypothesis shim
+
+BOUNDS = (0.0, 0.0, 1.0, 1.0)
+GRIDS = (17, 33, 65)                      # pitch 1/(grid-1) is a power of two
+DYADIC_SHIFTS = (-2.0, -0.5, 0.25, 0.5, 1.0, 3.5)
+POW2_SCALES = (0.5, 2.0, 4.0)
+
+lattice_pts = st.lists(
+    st.tuples(st.integers(0, 255), st.integers(0, 255)),
+    min_size=1, max_size=300).map(
+        lambda ij: np.asarray(ij, np.float32) / 256.0)
+
+
+def _contour(pts: np.ndarray, bounds, grid: int, max_verts: int):
+    out, cnt = geometry.extract_contour(
+        jnp.asarray(pts, jnp.float32), jnp.ones(len(pts), bool),
+        bounds, grid, max_verts)
+    return np.asarray(out), int(cnt)
+
+
+def _rng_pts(seed: int, n: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, 256, (n, 2)) / 256.0).astype(np.float32)
+
+
+# -- translation equivariance ----------------------------------------------
+
+
+def check_translation(pts, grid, tx, ty):
+    base, n = _contour(pts, BOUNDS, grid, 64)
+    moved_bounds = (BOUNDS[0] + tx, BOUNDS[1] + ty,
+                    BOUNDS[2] + tx, BOUNDS[3] + ty)
+    t = np.asarray([tx, ty], np.float32)
+    moved, m = _contour(pts + t, moved_bounds, grid, 64)
+    assert m == n
+    np.testing.assert_array_equal(moved[:m], base[:n] + t)
+    np.testing.assert_array_equal(moved[m:], 0.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(pts=lattice_pts, grid=st.sampled_from(GRIDS),
+       tx=st.sampled_from(DYADIC_SHIFTS), ty=st.sampled_from(DYADIC_SHIFTS))
+def test_translation_equivariant_hyp(pts, grid, tx, ty):
+    check_translation(pts, grid, tx, ty)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_translation_equivariant(seed):
+    pts = _rng_pts(seed, 200)
+    for grid in GRIDS:
+        for tx, ty in zip(DYADIC_SHIFTS, reversed(DYADIC_SHIFTS)):
+            check_translation(pts, grid, tx, ty)
+
+
+# -- scale equivariance ----------------------------------------------------
+
+
+def check_scale(pts, grid, s):
+    base, n = _contour(pts, BOUNDS, grid, 64)
+    scaled, m = _contour(pts * np.float32(s),
+                         (0.0, 0.0, s * BOUNDS[2], s * BOUNDS[3]), grid, 64)
+    assert m == n
+    np.testing.assert_array_equal(scaled[:m], base[:n] * np.float32(s))
+
+
+@settings(max_examples=30, deadline=None)
+@given(pts=lattice_pts, grid=st.sampled_from(GRIDS),
+       s=st.sampled_from(POW2_SCALES))
+def test_scale_equivariant_hyp(pts, grid, s):
+    check_scale(pts, grid, s)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_scale_equivariant(seed):
+    pts = _rng_pts(seed + 10, 150)
+    for grid in GRIDS:
+        for s in POW2_SCALES:
+            check_scale(pts, grid, s)
+
+
+# -- vertex budget ---------------------------------------------------------
+
+
+def check_budget(pts, grid, max_verts):
+    out, cnt = _contour(pts, BOUNDS, grid, max_verts)
+    oracle = geometry.grid_contour_np(pts.astype(np.float64), BOUNDS, grid)
+    assert cnt == min(len(oracle), max_verts)
+    assert out.shape == (max_verts, 2)
+    np.testing.assert_array_equal(out[cnt:], 0.0)
+    oracle_set = {(round(float(x), 6), round(float(y), 6)) for x, y in oracle}
+    got = {(round(float(x), 6), round(float(y), 6)) for x, y in out[:cnt]}
+    assert len(got) == cnt, "contour emitted duplicate vertices"
+    assert got <= oracle_set, "contour vertex is not a boundary-cell centre"
+    if len(oracle) <= max_verts:
+        assert got == oracle_set, "budget not exhausted yet cells dropped"
+
+
+@settings(max_examples=30, deadline=None)
+@given(pts=lattice_pts, grid=st.sampled_from(GRIDS),
+       max_verts=st.sampled_from((8, 32, 128)))
+def test_vertex_budget_hyp(pts, grid, max_verts):
+    check_budget(pts, grid, max_verts)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_vertex_budget(seed):
+    pts = _rng_pts(seed + 20, 250)
+    for grid in GRIDS:
+        for max_verts in (8, 32, 128):
+            check_budget(pts, grid, max_verts)
+
+
+# -- merged-contour containment (§7 sizing rule) ---------------------------
+
+
+def _two_set_batch(pts_a, pts_b, cfg):
+    def one(pts):
+        contour, cnt = geometry.extract_contour(
+            jnp.asarray(pts, jnp.float32), jnp.ones(len(pts), bool),
+            cfg.bounds, cfg.grid, cfg.max_verts)
+        c = cfg.max_clusters
+        return ddc.ClusterSet(
+            contours=jnp.zeros((c, cfg.max_verts, 2)).at[0].set(contour),
+            counts=jnp.zeros((c,), jnp.int32).at[0].set(cnt),
+            sizes=jnp.zeros((c,), jnp.int32).at[0].set(len(pts)),
+            valid=jnp.zeros((c,), bool).at[0].set(True),
+            overflow=jnp.asarray(False))
+    return jax.tree.map(lambda x, y: jnp.stack([x, y]),
+                        one(pts_a), one(pts_b))
+
+
+def check_containment(pts_a, pts_b, grid):
+    cfg = ddc.DDCConfig(eps=0.05, min_pts=2, grid=grid,
+                        max_clusters=4, max_verts=192, bounds=BOUNDS)
+    batch = _two_set_batch(pts_a, pts_b, cfg)
+    merged, _ = ddc.merge_many(batch, cfg)
+    counts = np.asarray(batch.counts)
+    mcnt = np.asarray(merged.counts)
+    mvalid = np.asarray(merged.valid)
+    assert mcnt[mvalid].sum() <= counts.sum()
+    assert int(np.asarray(merged.sizes).sum()) == len(pts_a) + len(pts_b)
+    inputs = {
+        (round(float(x), 6), round(float(y), 6))
+        for k in range(2)
+        for x, y in np.asarray(batch.contours[k, 0])[:counts[k, 0]]
+    }
+    for slot in np.nonzero(mvalid)[0]:
+        verts = np.asarray(merged.contours[slot])[:mcnt[slot]]
+        got = {(round(float(x), 6), round(float(y), 6)) for x, y in verts}
+        assert got <= inputs, (
+            "merged contour left the union of member contour vertices")
+
+
+@settings(max_examples=20, deadline=None)
+@given(a=lattice_pts, b=lattice_pts, grid=st.sampled_from((33, 65)))
+def test_merged_contour_containment_hyp(a, b, grid):
+    check_containment(a, b, grid)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_merged_contour_containment(seed):
+    rng = np.random.default_rng(seed + 30)
+    a = _rng_pts(seed + 40, 120)
+    # b: a shifted-by-dyadic copy plus fresh lattice points, so the merge
+    # sometimes connects and sometimes doesn't.
+    b = np.concatenate([
+        np.clip(a[: len(a) // 2] + np.float32(0.25), 0, 255 / 256),
+        _rng_pts(seed + 50, 60),
+    ])
+    check_containment(a, b, int(rng.choice((33, 65))))
