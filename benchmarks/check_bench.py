@@ -69,9 +69,14 @@ def check_phase2(doc: dict):
     _require(len(rows) > 0, "phase2: rows is empty")
     layouts = _typed(doc, "layouts", dict, "phase2")
     _require(len(layouts) >= 3, "phase2: fewer than 3 layouts")
+    _require(doc.get("backend") == "jit",
+             f"phase2: backend tag {doc.get('backend')!r} != 'jit' — the "
+             f"artifact must record which repro.ddc backend produced it")
     seen = set()
     for i, row in enumerate(rows):
         ctx = f"phase2.rows[{i}]"
+        _require(_typed(row, "backend", str, ctx) == "jit",
+                 f"{ctx}: backend {row['backend']!r} != 'jit'")
         layout = _typed(row, "layout", str, ctx)
         _require(layout in layouts, f"{ctx}: unknown layout {layout!r}")
         sched = _typed(row, "schedule", str, ctx)
@@ -120,9 +125,14 @@ def check_serve(doc: dict):
     _require(len(rows) > 0, "serve: rows is empty")
     layouts = _typed(doc, "layouts", dict, "serve")
     _require(len(layouts) >= 3, "serve: fewer than 3 layouts")
+    _require(doc.get("backend") == "stream",
+             f"serve: backend tag {doc.get('backend')!r} != 'stream' — the "
+             f"artifact must record which repro.ddc backend produced it")
     seen = set()
     for i, row in enumerate(rows):
         ctx = f"serve.rows[{i}]"
+        _require(_typed(row, "backend", str, ctx) == "stream",
+                 f"{ctx}: backend {row['backend']!r} != 'stream'")
         layout = _typed(row, "layout", str, ctx)
         _require(layout in layouts, f"{ctx}: unknown layout {layout!r}")
         k = _typed(row, "shards", int, ctx)

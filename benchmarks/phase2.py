@@ -54,7 +54,7 @@ import numpy as np             # noqa: E402
 
 from repro.core import ddc     # noqa: E402
 from repro.data import spatial  # noqa: E402
-from repro.launch import mesh as mesh_mod  # noqa: E402
+from repro.ddc import DDC, DDCConfig  # noqa: E402
 
 SCHEDULES = ("sync", "async", "tree")
 
@@ -67,14 +67,14 @@ same_partition = ddc.same_clustering
 
 def bench_cell(pts: np.ndarray, spec: dict, k: int, schedule: str,
                host_labels: np.ndarray, reps: int) -> dict:
-    cfg = ddc.DDCConfig(
+    cfg = DDCConfig(
         eps=spec["eps"], min_pts=spec["min_pts"], grid=spec["grid"],
         max_clusters=spec["max_clusters"], max_verts=spec["max_verts"],
-        schedule=schedule,
-    )
-    mesh = mesh_mod.make_host_mesh(k)
+        schedule=schedule, backend="jit", shards=k,
+    ).validate()
     meter = ddc.CommMeter()
-    run = ddc.make_ddc_fn(mesh, "data", cfg, meter)
+    model = DDC(cfg, meter=meter)
+    run = model.backend.make_runner(len(pts))
     x = jnp.asarray(pts)
     msk = jnp.ones(len(pts), bool)
     compiled = run.lower(
@@ -98,6 +98,7 @@ def bench_cell(pts: np.ndarray, spec: dict, k: int, schedule: str,
     labels = np.asarray(glabels)
     stats = meter.snapshot()
     return {
+        "backend": cfg.backend,
         "schedule": schedule,
         "shards": k,
         "wall_ms": round(best_ms, 1),
@@ -106,7 +107,7 @@ def bench_cell(pts: np.ndarray, spec: dict, k: int, schedule: str,
         "merge_slots": stats["merge_slots"],
         "bytes_exchanged": stats["bytes_total"],
         "collectives": stats["collectives"],
-        "buffer_bytes": cfg.buffer_bytes(),
+        "buffer_bytes": cfg.core().buffer_bytes(),
         "n_clusters": int(np.asarray(gcs.valid).sum()),
         "overflow": bool(np.asarray(gcs.overflow)),
         "matches_host": same_partition(labels, host_labels),
@@ -123,8 +124,13 @@ def run(out_path: str | None = None, print_rows: bool = True):
                                  "max_clusters")
         } | {"n": len(pts)}
         for k in SHARDS:
-            host_labels, _, _ = ddc.ddc_host(
-                pts, k, spec["eps"], spec["min_pts"], contour="grid")
+            # The oracle goes through the same front door: the host
+            # backend wraps ddc_host on the identical block partition.
+            host_labels = DDC(DDCConfig(
+                eps=spec["eps"], min_pts=spec["min_pts"], grid=spec["grid"],
+                max_clusters=spec["max_clusters"],
+                max_verts=spec["max_verts"], backend="host", shards=k,
+            )).fit(pts).labels_
             for schedule in SCHEDULES:
                 reps = 1 if k >= 32 else 2
                 row = bench_cell(pts, spec, k, schedule, host_labels, reps)
@@ -148,6 +154,7 @@ def run(out_path: str | None = None, print_rows: bool = True):
     out = {
         "schema": "phase2-bench/v1",
         "smoke": bool(_ARGS.smoke),
+        "backend": "jit",
         "n": N,
         "shards": list(SHARDS),
         "layouts": layouts_meta,

@@ -33,8 +33,8 @@ import numpy as np
 
 from repro.core import ddc
 from repro.data import spatial
+from repro.ddc import DDC, DDCConfig
 from repro.parallel import compress
-from repro.serve import ClusterService, StreamConfig
 
 
 def _parse_args(argv=None):
@@ -53,22 +53,23 @@ LAYOUTS = spatial.PHASE2_LAYOUTS
 
 def bench_cell(name: str, spec: dict, k: int, reps: int = 3) -> dict:
     pts = spec["make"](N)
-    cfg = ddc.DDCConfig(
-        eps=spec["eps"], min_pts=spec["min_pts"], grid=spec["grid"],
-        max_clusters=spec["max_clusters"], max_verts=spec["max_verts"])
-    cap = max(len(p) for p in np.array_split(np.arange(N), k))
+    cap = spatial.shard_capacity(N, k)
     batch = min(BATCH, cap)      # high shard counts shrink the buffers
+    cfg = DDCConfig(
+        eps=spec["eps"], min_pts=spec["min_pts"], grid=spec["grid"],
+        max_clusters=spec["max_clusters"], max_verts=spec["max_verts"],
+        backend="stream", shards=k, capacity=cap, max_batch=batch,
+        max_queries=QUERIES).validate()
     meter = ddc.CommMeter()
-    svc = ClusterService(
-        StreamConfig(shards=k, capacity=cap, max_batch=batch, ddc=cfg),
-        meter=meter)
+    model = DDC(cfg, meter=meter)
+    svc = model.service
 
     batches = spatial.stream_batches(pts, k, batch)
     # First batch+refresh compiles everything; time the rest.
     ingest_ms = []
     for i, (shard, chunk) in enumerate(batches):
         t0 = time.perf_counter()
-        svc.ingest(shard, chunk)
+        model.partial_fit(shard, chunk)
         svc.refresh()
         dt = (time.perf_counter() - t0) * 1e3
         if i > 0:
@@ -79,10 +80,11 @@ def bench_cell(name: str, spec: dict, k: int, reps: int = 3) -> dict:
     # equivalence check below runs on whatever is live, so duplicates
     # are counted on both sides.
     meter.reset()
-    svc.ingest(0, pts[:1])
+    model.partial_fit(0, pts[:1])
     svc.refresh()
     delta_bytes = meter.snapshot()["bytes_total"]
-    delta_ms = min_time(lambda: (svc.ingest(0, pts[:1]), svc.refresh()), reps)
+    delta_ms = min_time(
+        lambda: (model.partial_fit(0, pts[:1]), svc.refresh()), reps)
 
     # Exactness: the delta-maintained matrix vs a from-scratch rebuild of
     # the SAME state, then time the full path.
@@ -95,8 +97,8 @@ def bench_cell(name: str, spec: dict, k: int, reps: int = 3) -> dict:
 
     rng = np.random.default_rng(0)
     q = rng.uniform(0, 1, (QUERIES, 2)).astype(np.float32)
-    svc.query(q)   # compile
-    query_ms = min_time(lambda: svc.query(q), reps)
+    model.query(q)   # compile
+    query_ms = min_time(lambda: model.query(q), reps)
 
     live_pts, parts, labels = svc.live()
     host_labels, _, _ = ddc.ddc_host(
@@ -104,6 +106,7 @@ def bench_cell(name: str, spec: dict, k: int, reps: int = 3) -> dict:
         partition=parts, contour="grid")
 
     return {
+        "backend": cfg.backend,
         "layout": name,
         "shards": k,
         "n_live": int(len(live_pts)),
@@ -115,7 +118,7 @@ def bench_cell(name: str, spec: dict, k: int, reps: int = 3) -> dict:
         "full_bytes": full_bytes,
         "delta_bytes_int8": compress.pytree_wire_bytes_int8(svc.local_set(0))
         + k * cfg.max_clusters * 4,
-        "buffer_bytes": cfg.buffer_bytes(),
+        "buffer_bytes": cfg.core().buffer_bytes(),
         "d2_pairs_delta": cfg.max_clusters * k * cfg.max_clusters,
         "d2_pairs_full": (k * cfg.max_clusters) ** 2,
         "n_clusters": int(np.asarray(svc.global_set.valid).sum()),
@@ -167,6 +170,7 @@ def run(smoke: bool = False, out_path: str | None = None,
     out = {
         "schema": "serve-bench/v1",
         "smoke": bool(smoke),
+        "backend": "stream",
         "n": N,
         "batch": BATCH,
         "shards": list(shards),

@@ -1,17 +1,50 @@
-"""Quickstart: DDC on a Chameleon-like spatial dataset.
+"""Quickstart: the `repro.ddc` estimator API on a Chameleon-like dataset.
 
-Runs the paper's full pipeline on one host:
-  phase 1 — partition + per-shard DBSCAN + contour reduction,
-  phase 2 — hierarchical merge of contours,
-then compares against sequential DBSCAN and prints the sync-vs-async
-wall-clock simulation for the paper's 8-machine cluster.
+The canonical snippet — one config, one facade, any backend:
 
-  PYTHONPATH=src python examples/quickstart.py
+    from repro.ddc import DDC, DDCConfig
+
+    cfg = DDCConfig(eps=0.022, min_pts=4, backend="stream", shards=8,
+                    ...).validate(sample=pts)     # DESIGN §7 sizing probe
+    model = DDC(cfg).fit(pts)                     # phase 1 + phase 2
+    model.labels_                                 # global cluster ids
+    model.query(probes)                           # point -> cluster id
+    model.partial_fit(shard, batch, t=now)        # streaming writes
+    model.expire(now - window)                    # TTL eviction
+    model.save(path); DDC.load(path)              # bit-identical resume
+
+``--backend host`` is the paper-faithful NumPy oracle, ``jit`` the
+shard_map collective pipeline (sync/async/tree schedules), ``stream``
+the incremental delta-merge serve engine.  All three produce the same
+global clustering.
+
+  PYTHONPATH=src python examples/quickstart.py --backend host
+  PYTHONPATH=src python examples/quickstart.py --backend jit --shards 8
+  PYTHONPATH=src python examples/quickstart.py --backend stream
 """
+import argparse
+import os
+import tempfile
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--backend", choices=("host", "jit", "stream"), default="host")
+ap.add_argument("--shards", type=int, default=8)
+ap.add_argument("--n", type=int, default=6000)
+args = ap.parse_args()
+
+if args.backend == "jit":
+    # The jit backend lays shards over jax devices; the CPU device count
+    # must be pinned before jax initialises.
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={args.shards}"
+    ).strip()
+
 import numpy as np
 
-from repro.core import dbscan, ddc, partitioner, simulate as sim
+from repro.core import dbscan, partitioner, simulate as sim
 from repro.data import spatial
+from repro.ddc import DDC, DDCConfig
 
 
 def ascii_plot(pts, labels, width=72, height=24):
@@ -24,30 +57,66 @@ def ascii_plot(pts, labels, width=72, height=24):
 
 
 def main():
-    n, k = 6000, 8
+    n, k = args.n, args.shards
     pts = spatial.make_d1(n, seed=0, noise_frac=0.02)
-    eps, min_pts = 0.022, 4
 
-    print(f"== DDC on D1-like dataset (n={n}, {k} partitions) ==")
-    glabels, polys, _ = ddc.ddc_host(pts, k, eps=eps, min_pts=min_pts,
-                                     contour="grid")
-    # Hull contours give the compact wire representation (the grid run
-    # above preserves non-convexity for the merge decisions).
-    _, _, exchanged = ddc.ddc_host(pts, k, eps=eps, min_pts=min_pts,
-                                   contour="hull")
-    n_global = len(set(glabels[glabels >= 0]))
-    print(f"global clusters: {n_global}   noise: {(glabels < 0).sum()}")
-    print(f"data exchanged (hull representatives): {exchanged} vertices "
-          f"= {exchanged / n:.2%} of the dataset (paper: 1-2%)")
+    # One validated config drives every deployment style.  validate()
+    # rejects backend/schedule mismatches and (with a sample) configs
+    # whose merged contours would overflow the vertex budget (DESIGN §7).
+    cfg = DDCConfig(
+        eps=0.022, min_pts=4, grid=96, max_clusters=24, max_verts=320,
+        backend=args.backend, shards=k,
+    ).validate(sample=pts[::2])
 
-    seq = dbscan.dbscan_ref(pts, eps, min_pts)
+    print(f"== DDC on D1-like dataset (n={n}, backend={cfg.backend}, "
+          f"{k} shards) ==")
+    # t=0.0 stamps the batch for TTL eviction (stream backend; ignored
+    # by the batch backends) so later wall-clock expire() cutoffs and
+    # the fitted data share one clock.
+    model = DDC(cfg).fit(pts, t=0.0)
+    glabels = model.labels_
+    print(f"global clusters: {model.n_clusters_}   "
+          f"noise: {(glabels < 0).sum()}")
+
+    stats = model.comm_stats()
+    if cfg.backend == "host":
+        # The host oracle ships raw contour vertices: the paper's
+        # data-reduction claim, measured directly.
+        print(f"phase-2 wire bytes (host): {stats['bytes_total']} vs "
+              f"{n * 8} of raw points — only contour representatives "
+              f"cross the network")
+    else:
+        # The engine backends ship fixed-size (C, V)-padded ClusterSet
+        # buffers per collective, metered exactly at trace time.
+        print(f"phase-2 wire bytes ({cfg.backend}): "
+              f"{stats['bytes_total']} across {stats['collectives']} "
+              f"collectives ({stats['merge_steps']} merge steps) — "
+              f"padded ClusterSet buffers, never raw points")
+
+    # Read path: point -> global cluster id (DBSCAN's border rule).
+    probes = np.array([[0.30, 0.65], [0.62, 0.22], [0.02, 0.98]])
+    print(f"query {probes.tolist()} -> {model.query(probes).tolist()}")
+
+    if cfg.backend == "stream":
+        # Streaming extras: timestamped writes, TTL eviction, and a
+        # bit-identical snapshot/restore round-trip.
+        model.partial_fit(0, pts[:64], t=1.0)
+        model.expire(t=0.0)              # nothing older than t=0 yet
+        with tempfile.TemporaryDirectory() as d:
+            model.save(os.path.join(d, "ckpt"))
+            restored = DDC.load(os.path.join(d, "ckpt"))
+            same = np.array_equal(model.labels_, restored.labels_)
+        print(f"snapshot -> restore: labels bit-identical = {same}")
+
+    seq = dbscan.dbscan_ref(pts, cfg.eps, cfg.min_pts)
     # Micro-fragments (< 2*min_pts points) can fall below min_pts when a
     # partition boundary splits them — a known DDC property; compare the
     # real clusters.
-    big = [c for c in set(seq[seq >= 0]) if (seq == c).sum() >= 2 * min_pts]
+    big = [c for c in set(seq[seq >= 0])
+           if (seq == c).sum() >= 2 * cfg.min_pts]
     print(f"sequential DBSCAN finds {len(big)} clusters (+"
           f"{len(set(seq[seq >= 0])) - len(big)} micro-fragments) -> "
-          f"{'MATCH' if len(big) == n_global else 'DIFFER'}")
+          f"{'MATCH' if len(big) == model.n_clusters_ else 'DIFFER'}")
 
     sample = np.random.default_rng(0).choice(n, 1200, replace=False)
     print(ascii_plot(pts[sample], glabels[sample]))

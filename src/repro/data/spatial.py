@@ -193,6 +193,14 @@ PHASE2_LAYOUTS = {
 }
 
 
+def shard_capacity(n: int, shards: int) -> int:
+    """Ring slots per shard so a block partition of ``n`` points fits
+    exactly: the largest ``np.array_split`` part, i.e. ceil(n/shards).
+    The one sizing rule shared by the stream backend, the serve
+    benchmarks/launchers, and the equivalence tests."""
+    return max(-(-n // shards), 1)
+
+
 def stream_batches(pts: np.ndarray, shards: int, batch: int,
                    order: str = "round_robin", seed: int | None = None):
     """Deterministic ingest schedule for the streaming serve engine.

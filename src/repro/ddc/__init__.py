@@ -1,0 +1,28 @@
+"""Public DDC API: one estimator facade, pluggable backends.
+
+    from repro.ddc import DDC, DDCConfig
+    model = DDC(DDCConfig(backend="stream", shards=8, capacity=4096))
+
+The implementation primitives stay importable where they always lived —
+``repro.core.ddc`` (ddc_host, make_ddc_fn, merge_many, …) and
+``repro.serve`` (ClusterService) — and the facade delegates to them;
+they are re-exported here for discoverability.  New call sites should
+go through ``DDC``.
+"""
+from repro.core.ddc import (
+    ClusterSet,
+    CommMeter,
+    ddc_host,
+    make_ddc_fn,
+    same_clustering,
+)
+from repro.ddc.api import DDC, SNAPSHOT_FORMAT
+from repro.ddc.backends import BACKENDS, Backend, register_backend
+from repro.ddc.config import ConfigError, DDCConfig
+
+__all__ = [
+    "DDC", "DDCConfig", "ConfigError", "SNAPSHOT_FORMAT",
+    "BACKENDS", "Backend", "register_backend",
+    "ClusterSet", "CommMeter", "ddc_host", "make_ddc_fn",
+    "same_clustering",
+]

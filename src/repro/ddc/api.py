@@ -1,0 +1,173 @@
+"""`repro.ddc.DDC` — the estimator-style front door to the whole repo.
+
+One object, one lifecycle, every deployment style::
+
+    from repro.ddc import DDC, DDCConfig
+
+    cfg = DDCConfig(eps=0.02, min_pts=5, backend="stream", shards=8,
+                    capacity=4096).validate(sample=pts)
+    model = DDC(cfg).fit(pts, t=t0)      # batch fit (any backend)
+    model.partial_fit(shard=3, batch=new_pts, t=now)   # streaming write
+    model.expire(now - window)           # TTL eviction (stream backend)
+    model.labels_                        # global labels of fitted points
+    model.query(probes)                  # point -> global cluster id
+    model.comm_stats()                   # exact wire-byte accounting
+    model.save("ckpt/"); DDC.load("ckpt/")   # bit-identical resume
+
+The backend (``host`` | ``jit`` | ``stream``) is a config knob; all
+backends produce the identical global clustering on the same per-shard
+membership.  Configs are validated at construction (``DDCConfig
+.validate``), so schedule/backend mismatches and DESIGN.md §7 sizing
+violations fail loudly before any distributed work runs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+
+import numpy as np
+
+from repro.core import ddc as core_ddc
+from repro.ddc import backends as backends_mod
+from repro.ddc.config import DDCConfig
+
+SNAPSHOT_FORMAT = "repro-ddc/v1"
+
+
+class DDC:
+    """Estimator facade over a pluggable DDC execution backend."""
+
+    def __init__(self, config: DDCConfig,
+                 meter: core_ddc.CommMeter | None = None):
+        self.config = config.validate()
+        self.backend = backends_mod.BACKENDS[config.backend](
+            self.config, meter=meter)
+
+    # -- write path --------------------------------------------------------
+
+    def fit(self, points: np.ndarray, t: float | None = None) -> "DDC":
+        """Cluster ``points`` (n, 2), block-partitioned over the
+        configured shards.  Replaces any previously fitted state.
+
+        ``t`` stamps the batch for TTL eviction (stream backend).  Pass
+        it whenever later ``partial_fit``/``expire`` calls use wall-clock
+        timestamps — the default stamp is the ingest sequence number,
+        which any wall-clock ``expire`` cutoff would treat as ancient."""
+        self.backend.fit(points, t=t)
+        return self
+
+    def partial_fit(self, shard: int, batch: np.ndarray,
+                    t: float | None = None) -> "DDC":
+        """Append ``batch`` to ``shard`` and fold it into the global
+        clustering on the next read.  ``t`` stamps the batch for TTL
+        eviction (stream backend; defaults to an ingest sequence
+        number).  Batch backends re-run the full pipeline lazily; the
+        stream backend repairs incrementally (delta-merge)."""
+        self.backend.partial_fit(shard, batch, t=t)
+        return self
+
+    def expire(self, t: float) -> int:
+        """Evict every point ingested with timestamp < ``t`` from all
+        shards (stream backend only).  Returns the eviction count."""
+        return self.backend.expire(t)
+
+    # -- read path ---------------------------------------------------------
+
+    @property
+    def labels_(self) -> np.ndarray:
+        """Global cluster ids of the fitted (live) points, in per-shard
+        ingest order (== input order after a plain ``fit``)."""
+        return self.backend.labels()
+
+    @property
+    def points_(self) -> np.ndarray:
+        """The fitted (live) points, aligned with ``labels_``."""
+        return self.backend.points()
+
+    @property
+    def n_clusters_(self) -> int:
+        labels = self.labels_
+        return len(set(labels[labels >= 0].tolist()))
+
+    def query(self, points: np.ndarray) -> np.ndarray:
+        """Global cluster id per query point: nearest clustered fitted
+        point within ``eps`` (DBSCAN's border rule), else -1."""
+        return self.backend.query(points)
+
+    def comm_stats(self) -> dict:
+        """Exact trace-time wire accounting for the chosen backend."""
+        return self.backend.comm_stats()
+
+    # -- snapshot / restore ------------------------------------------------
+
+    def save(self, path: str) -> str:
+        """Serialise config + full backend state under directory ``path``.
+
+        Both files are written to a sibling temp directory, fsynced, and
+        published with ONE rename (the ``train/checkpoint.py`` idiom), so
+        a reader can never observe a manifest from one save paired with
+        arrays from another.  Overwrites swap via two renames: the
+        previous snapshot is moved aside first and deleted last, so a
+        crash mid-save leaves either the new snapshot at ``path`` or the
+        old one recoverable under ``<path>.old-*`` — never a long
+        no-checkpoint window.  A restored model resumes bit-identically —
+        for the stream backend that includes the ring buffers, per-shard
+        ClusterSets, and the cached pair-d2 matrix, so no re-cluster is
+        needed on restart."""
+        arrays, state_manifest = self.backend.state()
+        manifest = {
+            "format": SNAPSHOT_FORMAT,
+            "config": self.config.to_manifest(),
+            "state": state_manifest,
+        }
+        path = path.rstrip(os.sep)
+        parent = os.path.dirname(os.path.abspath(path))
+        os.makedirs(parent, exist_ok=True)
+        tmp = tempfile.mkdtemp(prefix=os.path.basename(path) + ".tmp-",
+                               dir=parent)
+        np.savez(os.path.join(tmp, "state.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        for fn in os.listdir(tmp):
+            fd = os.open(os.path.join(tmp, fn), os.O_RDONLY)
+            os.fsync(fd)
+            os.close(fd)
+        old = None
+        if os.path.exists(path):
+            old = tempfile.mkdtemp(prefix=os.path.basename(path) + ".old-",
+                                   dir=parent)
+            os.rmdir(old)
+            os.rename(path, old)
+        os.rename(tmp, path)
+        if old is not None:
+            shutil.rmtree(old, ignore_errors=True)
+        return path
+
+    @classmethod
+    def load(cls, path: str,
+             meter: core_ddc.CommMeter | None = None) -> "DDC":
+        """Rebuild a saved model; the stream backend resumes exactly
+        where ``save`` left off (same labels, same cached matrices).
+        ``meter`` becomes the restored backend's comm meter — it counts
+        traffic from this process on; a snapshot does not replay the
+        saved run's collectives."""
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        if manifest.get("format") != SNAPSHOT_FORMAT:
+            raise ValueError(
+                f"{path}: unknown snapshot format {manifest.get('format')!r}")
+        model = cls(DDCConfig.from_manifest(manifest["config"]), meter=meter)
+        with np.load(os.path.join(path, "state.npz")) as z:
+            arrays = {k: z[k] for k in z.files}
+        model.backend.load_state(arrays, manifest["state"])
+        return model
+
+    # -- stream-backend introspection --------------------------------------
+
+    @property
+    def service(self):
+        """The underlying ``ClusterService`` (stream backend only) for
+        callers that need engine internals (benchmarks, tests)."""
+        return self.backend.service

@@ -1,0 +1,366 @@
+"""Pluggable execution backends behind the `repro.ddc.DDC` facade.
+
+A ``Backend`` executes the paper's two-phase pipeline for one deployment
+style; the facade is backend-agnostic, which is the point — the paper's
+contribution is communication-model-agnostic, so switching between the
+host oracle, the jitted ``shard_map`` collectives, and the streaming
+delta-merge engine must be a config knob, not a caller rewrite.
+
+* ``host``   — wraps ``repro.core.ddc.ddc_host`` (NumPy, exact
+  polygon-overlap merge): the paper-faithful oracle.
+* ``jit``    — wraps ``repro.core.ddc.make_ddc_fn`` over a host mesh:
+  phase 1 per lane, phase 2 across the configured collective schedule.
+* ``stream`` — wraps ``repro.serve.ClusterService``: ring-buffer ingest,
+  dirty-shard phase 1, exact delta-merge, TTL eviction, snapshots.
+
+All three consume the same per-shard membership (the block
+``np.array_split`` partition), so they produce the identical global
+clustering (``repro.core.ddc.same_clustering``) — asserted by
+``tests/test_ddc_api.py`` on every ``PHASE2_LAYOUTS`` layout.
+
+Batch backends (``host``, ``jit``) support ``partial_fit`` by buffering
+per-shard points and lazily re-running the full pipeline on the next
+read; only ``stream`` repairs the global state incrementally and only
+``stream`` supports TTL eviction (``expire``).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Type
+
+import numpy as np
+
+from repro.core import ddc as core_ddc
+from repro.ddc.config import ConfigError, DDCConfig
+
+BACKENDS: Dict[str, Type["Backend"]] = {}
+
+
+def register_backend(name: str):
+    """Class decorator: make ``name`` constructible via ``DDCConfig``."""
+    def deco(cls):
+        cls.name = name
+        BACKENDS[name] = cls
+        return cls
+    return deco
+
+
+def _query_nearest(q: np.ndarray, pts: np.ndarray, labels: np.ndarray,
+                   eps: float, chunk: int = 512) -> np.ndarray:
+    """DBSCAN's border rule against a frozen clustering: the label of the
+    nearest *clustered* fitted point within ``eps``, else noise.  The
+    same read-path semantics as ``ClusterService.query``."""
+    out = np.full(len(q), -1, np.int32)
+    keep = labels >= 0
+    if not keep.any():
+        return out
+    ref = pts[keep].astype(np.float64)
+    ref_lab = labels[keep]
+    for off in range(0, len(q), chunk):
+        block = q[off:off + chunk].astype(np.float64)
+        d2 = ((block[:, None, :] - ref[None, :, :]) ** 2).sum(-1)
+        j = np.argmin(d2, axis=1)
+        hit = d2[np.arange(len(block)), j] <= eps * eps
+        out[off:off + chunk] = np.where(hit, ref_lab[j], -1)
+    return out
+
+
+class Backend:
+    """Execution-engine interface the facade drives (see module doc)."""
+
+    name = "?"
+
+    def __init__(self, cfg: DDCConfig,
+                 meter: core_ddc.CommMeter | None = None):
+        self.cfg = cfg
+        self.meter = meter or core_ddc.CommMeter()
+
+    # write path
+    def fit(self, points: np.ndarray, t: float | None = None) -> None:
+        raise NotImplementedError
+
+    def partial_fit(self, shard: int, batch: np.ndarray,
+                    t: float | None = None) -> None:
+        raise NotImplementedError
+
+    def expire(self, t: float) -> int:
+        raise ConfigError(
+            f"TTL eviction needs backend='stream', not {self.name!r}")
+
+    # read path
+    def labels(self) -> np.ndarray:
+        raise NotImplementedError
+
+    def points(self) -> np.ndarray:
+        raise NotImplementedError
+
+    def query(self, points: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    def comm_stats(self) -> dict:
+        return {"backend": self.name} | self.meter.snapshot()
+
+    # snapshot/restore
+    def state(self) -> tuple[dict, dict]:
+        """(arrays, manifest): everything needed to resume bit-identically."""
+        raise NotImplementedError
+
+    def load_state(self, arrays: dict, manifest: dict) -> None:
+        raise NotImplementedError
+
+
+class _BufferedBatchBackend(Backend):
+    """Shared machinery for the batch backends: per-shard point buffers,
+    lazy refit, block-partition bookkeeping."""
+
+    def __init__(self, cfg: DDCConfig, meter=None):
+        super().__init__(cfg, meter)
+        self._shard_pts: List[np.ndarray] = [
+            np.zeros((0, 2), np.float32) for _ in range(cfg.shards)]
+        self._labels: Optional[np.ndarray] = None
+
+    def fit(self, points: np.ndarray, t: float | None = None) -> None:
+        pts = np.asarray(points, np.float32).reshape(-1, 2)
+        parts = np.array_split(np.arange(len(pts)), self.cfg.shards)
+        self._shard_pts = [pts[idx] for idx in parts]
+        self._labels = None
+
+    def partial_fit(self, shard, batch, t=None) -> None:
+        if not 0 <= shard < self.cfg.shards:
+            raise ConfigError(f"shard {shard} out of range [0, {self.cfg.shards})")
+        batch = np.asarray(batch, np.float32).reshape(-1, 2)
+        self._shard_pts[shard] = np.concatenate([self._shard_pts[shard], batch])
+        self._labels = None
+
+    def points(self) -> np.ndarray:
+        return (np.concatenate(self._shard_pts) if any(len(p) for p in self._shard_pts)
+                else np.zeros((0, 2), np.float32))
+
+    def parts(self) -> List[np.ndarray]:
+        out, base = [], 0
+        for p in self._shard_pts:
+            out.append(np.arange(base, base + len(p)))
+            base += len(p)
+        return out
+
+    def labels(self) -> np.ndarray:
+        if self._labels is None:
+            self._labels = self._refit()
+        return self._labels
+
+    def query(self, points: np.ndarray) -> np.ndarray:
+        q = np.asarray(points, np.float32).reshape(-1, 2)
+        return _query_nearest(q, self.points(), self.labels(), self.cfg.eps)
+
+    def _refit(self) -> np.ndarray:
+        raise NotImplementedError
+
+    def comm_stats(self) -> dict:
+        self.labels()     # the meter fills when the (lazy) pipeline runs
+        return super().comm_stats()
+
+    def state(self) -> tuple[dict, dict]:
+        arrays = {f"shard_{s}": p for s, p in enumerate(self._shard_pts)}
+        arrays["labels"] = self.labels()
+        return arrays, {"n_shards": self.cfg.shards}
+
+    def load_state(self, arrays, manifest) -> None:
+        self._shard_pts = [np.asarray(arrays[f"shard_{s}"], np.float32)
+                           for s in range(int(manifest["n_shards"]))]
+        self._labels = np.asarray(arrays["labels"], np.int32)
+
+
+@register_backend("host")
+class HostBackend(_BufferedBatchBackend):
+    """Paper-faithful NumPy reference: per-partition ``dbscan_ref`` +
+    exact polygon-overlap union-find (``ddc_host``, grid contours)."""
+
+    def __init__(self, cfg: DDCConfig, meter=None):
+        super().__init__(cfg, meter)
+        self._exchanged = 0
+
+    def _refit(self) -> np.ndarray:
+        pts = self.points()
+        parts = self.parts()
+        if len(pts) == 0:
+            return np.zeros((0,), np.int32)
+        labels, _, exchanged = core_ddc.ddc_host(
+            pts, len(parts), self.cfg.eps, self.cfg.min_pts,
+            partition=parts, contour="grid")
+        self._exchanged = int(exchanged)
+        # Contour vertices are the only phase-2 traffic (the 1–2 % claim):
+        # each crosses once as an (x, y) f32 pair.
+        self.meter.add_collective(1, self._exchanged * 8)
+        self.meter.add_merge(len(parts), self.cfg.max_clusters)
+        return labels.astype(np.int32)
+
+    def comm_stats(self) -> dict:
+        return super().comm_stats() | {"contour_vertices": self._exchanged}
+
+    def state(self) -> tuple[dict, dict]:
+        arrays, manifest = super().state()
+        # labels() ran inside super().state(), so the counter is current;
+        # a restored model must report it without re-running the fit.
+        return arrays, manifest | {"exchanged": self._exchanged}
+
+    def load_state(self, arrays, manifest) -> None:
+        super().load_state(arrays, manifest)
+        self._exchanged = int(manifest.get("exchanged", 0))
+
+
+@register_backend("jit")
+class JitBackend(_BufferedBatchBackend):
+    """Jitted ``shard_map`` pipeline over a host mesh: zero-communication
+    phase 1 per lane, then the configured collective schedule (sync
+    all-gather / async butterfly / tree) for phase 2.
+
+    Per-shard buffers are padded to a common static width so the mesh
+    sees exactly the block partition the other backends use; the padding
+    mask keeps padded rows out of phase 1.
+    """
+
+    def __init__(self, cfg: DDCConfig, meter=None):
+        super().__init__(cfg, meter)
+        self._runners: dict = {}
+
+    def make_runner(self, n_points: int):
+        """The jitted distributed entry point for ``n_points`` inputs
+        ((n, 2) + (n,) mask, sharded over the mesh).  Exposed for the
+        benchmarks/dry-runs that lower + compile it explicitly;
+        ``n_points`` must be a multiple of ``shards``."""
+        import jax
+
+        from repro.launch import mesh as mesh_mod
+
+        k = self.cfg.shards
+        if n_points % k:
+            raise ConfigError(f"n_points {n_points} not a multiple of shards {k}")
+        if len(jax.devices()) < k:
+            raise ConfigError(
+                f"jit backend needs >= {k} devices but jax sees "
+                f"{len(jax.devices())}; set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={k} before jax "
+                f"initialises (or lower shards)")
+        key = n_points
+        if key not in self._runners:
+            if len(self._runners) >= 4:   # drop stale executables: every
+                self._runners.clear()     # distinct width is a recompile
+            mesh = mesh_mod.make_host_mesh(k)
+            self._runners[key] = core_ddc.make_ddc_fn(
+                mesh, "data", self.cfg.core(), self.meter)
+        return self._runners[key]
+
+    def _refit(self) -> np.ndarray:
+        import jax.numpy as jnp
+
+        k = self.cfg.shards
+        lens = [len(p) for p in self._shard_pts]
+        if sum(lens) == 0:
+            return np.zeros((0,), np.int32)
+        # Round the padded width up so a partial_fit-driven trickle of
+        # growth re-uses one compiled program instead of recompiling the
+        # whole shard_map pipeline at every new max-shard length.
+        cap = max(lens)
+        cap = max(16, 1 << (cap - 1).bit_length())
+        padded = np.zeros((k, cap, 2), np.float32)
+        mask = np.zeros((k, cap), bool)
+        for s, p in enumerate(self._shard_pts):
+            padded[s, :len(p)] = p
+            mask[s, :len(p)] = True
+        run = self.make_runner(k * cap)
+        glabels, _, _ = run(
+            jnp.asarray(padded.reshape(k * cap, 2)),
+            jnp.asarray(mask.reshape(k * cap)))
+        flat = np.asarray(glabels).reshape(k, cap)
+        return np.concatenate(
+            [flat[s, :n] for s, n in enumerate(lens)]).astype(np.int32)
+
+
+@register_backend("stream")
+class StreamBackend(Backend):
+    """The online serve engine: ring-buffer ingest, dirty-shard phase 1,
+    exact delta-merge, point queries, TTL eviction, and bit-identical
+    snapshot/restore.  ``fit`` streams the batch in; ``partial_fit`` is
+    the native write path."""
+
+    def __init__(self, cfg: DDCConfig, meter=None):
+        super().__init__(cfg, meter)
+        self._svc = None
+
+    @property
+    def service(self):
+        """The underlying ``ClusterService`` (lazily built: the ring
+        capacity may be sized by the first ``fit``)."""
+        if self._svc is None:
+            if self.cfg.capacity is None:
+                raise ConfigError(
+                    "backend='stream' with partial_fit before fit needs an "
+                    "explicit capacity in DDCConfig (fit() would size it "
+                    "from the batch)")
+            self._svc = self._build(self.cfg.capacity)
+        return self._svc
+
+    def _build(self, capacity: int):
+        from repro.serve import ClusterService, StreamConfig
+
+        return ClusterService(
+            StreamConfig(
+                shards=self.cfg.shards, capacity=capacity,
+                max_batch=min(self.cfg.max_batch, capacity),
+                max_queries=self.cfg.max_queries,
+                merge_mode=self.cfg.merge_mode, ddc=self.cfg.core()),
+            meter=self.meter)
+
+    def fit(self, points: np.ndarray, t: float | None = None) -> None:
+        from repro.data import spatial
+
+        pts = np.asarray(points, np.float32).reshape(-1, 2)
+        k = self.cfg.shards
+        cap = self.cfg.capacity or spatial.shard_capacity(len(pts), k)
+        self._svc = self._build(cap)
+        batch = min(self.cfg.max_batch, cap)
+        for shard, chunk in spatial.stream_batches(pts, k, batch):
+            self._svc.ingest(shard, chunk, t=t)
+        self._svc.refresh()
+
+    def partial_fit(self, shard, batch, t=None) -> None:
+        self.service.ingest(shard, batch, t=t)
+
+    def expire(self, t: float) -> int:
+        return sum(self.service.evict_older_than(s, t)
+                   for s in range(self.cfg.shards))
+
+    def labels(self) -> np.ndarray:
+        _, _, labels = self.service.live()
+        return labels
+
+    def points(self) -> np.ndarray:
+        pts, _, _ = self.service.live()
+        return pts
+
+    def parts(self) -> List[np.ndarray]:
+        _, parts, _ = self.service.live()
+        return parts
+
+    def query(self, points: np.ndarray) -> np.ndarray:
+        return self.service.query(points)
+
+    def comm_stats(self) -> dict:
+        stats = dict(self.service.stats()) if self._svc is not None else {}
+        stats.pop("comm", None)   # flattened below — don't nest a duplicate
+        return {"backend": self.name} | stats | self.meter.snapshot()
+
+    def state(self) -> tuple[dict, dict]:
+        return self.service.state_dict()
+
+    def load_state(self, arrays, manifest) -> None:
+        from repro.serve import ClusterService, StreamConfig
+
+        scfg = StreamConfig(
+            shards=int(manifest["shards"]),
+            capacity=int(manifest["capacity"]),
+            max_batch=int(manifest["max_batch"]),
+            max_queries=int(manifest["max_queries"]),
+            merge_mode=manifest["merge_mode"],
+            ddc=self.cfg.core())
+        self._svc = ClusterService.from_state(
+            scfg, arrays, manifest, meter=self.meter)

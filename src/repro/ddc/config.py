@@ -1,0 +1,183 @@
+"""Validated deployment configuration for the `repro.ddc` facade.
+
+One config describes the *whole* deployment — the phase-1/phase-2 math
+(mirroring ``repro.core.ddc.DDCConfig``), the backend that executes it
+(``host`` | ``jit`` | ``stream``), and the streaming-engine knobs.  The
+point of the split from the core config is ``validate()``: every
+backend/schedule compatibility rule and the DESIGN.md §7 sizing rule is
+checked when the config is built, not discovered as a silent cluster
+unmapping (or a trace-time assert) deep inside a distributed run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core import dbscan as dbscan_mod
+from repro.core import ddc as core_ddc
+from repro.core import geometry
+
+SCHEDULES = ("sync", "async", "tree")
+LOCAL_ALGOS = ("dbscan", "kmeans")
+MERGE_MODES = ("delta", "full")
+
+
+class ConfigError(ValueError):
+    """A DDCConfig that cannot run correctly on its chosen backend."""
+
+
+@dataclasses.dataclass(frozen=True)
+class DDCConfig:
+    """Estimator-facade configuration (hashable; see ``validate``).
+
+    Clustering math (forwarded verbatim to ``repro.core.ddc.DDCConfig``):
+    ``eps``..``block_tile``.  Deployment: ``backend`` picks the execution
+    engine, ``shards`` the partition width.  Streaming-only knobs
+    (``capacity``..``merge_mode``) configure the serve engine and are
+    ignored by the batch backends.
+    """
+
+    eps: float = 0.05
+    min_pts: int = 5
+    bounds: Tuple[float, float, float, float] = (0.0, 0.0, 1.0, 1.0)
+    grid: int = 128
+    max_clusters: int = 32
+    max_verts: int = 128
+    merge_eps: Optional[float] = None
+    local_algo: str = "dbscan"
+    kmeans_k: int = 8
+    schedule: str = "async"
+    tree_degree: int = 2
+    merge_refine: str = "grid"
+    block_sparse: str = "auto"
+    block_tile: int = 512
+
+    backend: str = "host"
+    shards: int = 4
+
+    capacity: Optional[int] = None   # per-shard ring slots; None: sized at fit()
+    max_batch: int = 256
+    max_queries: int = 256
+    merge_mode: str = "delta"
+
+    _CORE_FIELDS = ("eps", "min_pts", "bounds", "grid", "max_clusters",
+                    "max_verts", "merge_eps", "local_algo", "kmeans_k",
+                    "schedule", "tree_degree", "merge_refine",
+                    "block_sparse", "block_tile")
+
+    def core(self) -> core_ddc.DDCConfig:
+        """The jit-static core config this deployment config wraps."""
+        kw = {f: getattr(self, f) for f in self._CORE_FIELDS}
+        kw["bounds"] = tuple(kw["bounds"])
+        return core_ddc.DDCConfig(**kw)
+
+    def to_manifest(self) -> dict:
+        """JSON-serialisable field dict (snapshot manifests)."""
+        out = dataclasses.asdict(self)
+        out["bounds"] = list(self.bounds)
+        return out
+
+    @classmethod
+    def from_manifest(cls, doc: dict) -> "DDCConfig":
+        kw = dict(doc)
+        kw["bounds"] = tuple(kw["bounds"])
+        return cls(**kw)
+
+    # -- the validated-construction contract -------------------------------
+
+    def validate(self, sample: np.ndarray | None = None) -> "DDCConfig":
+        """Check every statically decidable correctness rule; returns self.
+
+        Raises ``ConfigError`` on: malformed math parameters, an
+        unregistered backend, a schedule the chosen backend cannot run
+        (the async butterfly needs power-of-two shards), or streaming
+        knobs that would corrupt the ring buffers.
+
+        With ``sample`` (a representative (n, 2) point set) it also runs
+        the DESIGN.md §7 sizing probe: sequential DBSCAN on the sample,
+        then the occupancy-grid contour of every *global* (i.e. merged)
+        cluster must fit ``max_verts``, and the global cluster count must
+        fit ``max_clusters``.  This is the check that used to fail only
+        as silently unmapped clusters inside ``match_to_global`` at
+        runtime.
+        """
+        self._check_math()
+        self._check_deployment()
+        if sample is not None:
+            self._check_sizing(np.asarray(sample, np.float64).reshape(-1, 2))
+        return self
+
+    def _check_math(self) -> None:
+        x0, y0, x1, y1 = self.bounds
+        if not (x1 > x0 and y1 > y0):
+            raise ConfigError(f"degenerate bounds {self.bounds}")
+        if not self.eps > 0:
+            raise ConfigError(f"eps must be > 0, got {self.eps}")
+        if self.merge_eps is not None and not self.merge_eps > 0:
+            raise ConfigError(f"merge_eps must be > 0, got {self.merge_eps}")
+        if self.min_pts < 1:
+            raise ConfigError(f"min_pts must be >= 1, got {self.min_pts}")
+        if self.grid < 2:
+            raise ConfigError(f"grid must be >= 2, got {self.grid}")
+        if self.max_clusters < 1 or self.max_verts < 4:
+            raise ConfigError(
+                f"cluster/vertex budgets too small: C={self.max_clusters}, "
+                f"V={self.max_verts}")
+        if self.local_algo not in LOCAL_ALGOS:
+            raise ConfigError(f"unknown local_algo {self.local_algo!r}")
+        if self.local_algo == "kmeans" and self.kmeans_k < 1:
+            raise ConfigError(f"kmeans_k must be >= 1, got {self.kmeans_k}")
+        if self.schedule not in SCHEDULES:
+            raise ConfigError(
+                f"unknown schedule {self.schedule!r}; pick one of {SCHEDULES}")
+        if self.tree_degree < 2:
+            raise ConfigError(f"tree_degree must be >= 2, got {self.tree_degree}")
+        if self.merge_refine not in ("grid", "fps"):
+            raise ConfigError(f"unknown merge_refine {self.merge_refine!r}")
+
+    def _check_deployment(self) -> None:
+        from repro.ddc import backends   # late: backends imports this module
+
+        if self.backend not in backends.BACKENDS:
+            raise ConfigError(
+                f"unknown backend {self.backend!r}; registered: "
+                f"{sorted(backends.BACKENDS)}")
+        if self.shards < 1:
+            raise ConfigError(f"shards must be >= 1, got {self.shards}")
+        if self.backend == "jit" and self.schedule == "async" \
+                and self.shards & (self.shards - 1):
+            raise ConfigError(
+                f"the async butterfly schedule needs a power-of-two shard "
+                f"count, got shards={self.shards}; use schedule='sync' or "
+                f"'tree', or round shards to a power of two")
+        if self.merge_mode not in MERGE_MODES:
+            raise ConfigError(f"unknown merge_mode {self.merge_mode!r}")
+        if self.max_batch < 1 or self.max_queries < 1:
+            raise ConfigError(
+                f"max_batch/max_queries must be >= 1, got "
+                f"{self.max_batch}/{self.max_queries}")
+        if self.capacity is not None and self.capacity < self.max_batch:
+            raise ConfigError(
+                f"capacity {self.capacity} < max_batch {self.max_batch}: an "
+                f"append chunk could overwrite itself in the ring scatter")
+
+    def _check_sizing(self, sample: np.ndarray) -> None:
+        labels = dbscan_mod.dbscan_ref(sample, self.eps, self.min_pts)
+        ids = sorted(set(labels[labels >= 0].tolist()))
+        if len(ids) > self.max_clusters:
+            raise ConfigError(
+                f"sizing probe: the sample holds {len(ids)} global clusters "
+                f"but max_clusters={self.max_clusters}; the merge would "
+                f"overflow the slot budget (DESIGN.md §7)")
+        for cid in ids:
+            occ = len(geometry.grid_contour_np(
+                sample[labels == cid], tuple(self.bounds), self.grid))
+            if occ > self.max_verts:
+                raise ConfigError(
+                    f"sizing probe: the merged contour of cluster {cid} "
+                    f"occupies {occ} boundary cells at grid={self.grid} but "
+                    f"max_verts={self.max_verts}; a truncated global outline "
+                    f"silently unmaps distant fragments in match_to_global "
+                    f"(DESIGN.md §7) — raise max_verts or coarsen grid")

@@ -14,19 +14,20 @@ wire bytes: all-gather (K−1)·B vs butterfly log2(K)·B.
   PYTHONPATH=src python -m repro.launch.dryrun_ddc
 """
 import argparse
+import dataclasses
 import json
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import ddc
-from repro.launch import hlo_cost, mesh as mesh_mod, roofline
+from repro.ddc import DDC, DDCConfig
+from repro.launch import hlo_cost, roofline
 
 
-def run_cell(n_lanes: int, schedule: str, n_points: int, cfg: ddc.DDCConfig):
-    mesh = mesh_mod.make_mesh((n_lanes,), ("data",))
-    cfg = ddc.DDCConfig(**{**cfg.__dict__, "schedule": schedule})
-    run = ddc.make_ddc_fn(mesh, "data", cfg)
+def run_cell(n_lanes: int, schedule: str, n_points: int, cfg: DDCConfig):
+    cfg = dataclasses.replace(cfg, schedule=schedule, shards=n_lanes)
+    model = DDC(cfg)
+    run = model.backend.make_runner(n_points)
     pts = jax.ShapeDtypeStruct((n_points, 2), jnp.float32)
     mask = jax.ShapeDtypeStruct((n_points,), jnp.bool_)
     lowered = jax.jit(run.__wrapped__ if hasattr(run, "__wrapped__") else run
@@ -44,7 +45,7 @@ def run_cell(n_lanes: int, schedule: str, n_points: int, cfg: ddc.DDCConfig):
         "t_compute": res["flops"] / roofline.PEAK_FLOPS,
         "t_memory": res["bytes"] / roofline.HBM_BW,
         "t_collective": res["collective_bytes"] / roofline.LINK_BW,
-        "wire_budget_bytes": cfg.buffer_bytes() * (
+        "wire_budget_bytes": cfg.core().buffer_bytes() * (
             (n_lanes - 1) if schedule == "sync" else max(n_lanes.bit_length() - 1, 1)),
     }
     return rec
@@ -55,8 +56,8 @@ def main():
     ap.add_argument("--points", type=int, default=1 << 20)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
-    cfg = ddc.DDCConfig(eps=0.01, min_pts=4, grid=256, max_clusters=64,
-                        max_verts=128)
+    cfg = DDCConfig(eps=0.01, min_pts=4, grid=256, max_clusters=64,
+                    max_verts=128, backend="jit")
     recs = []
     for lanes in (256, 512):
         for sched in ("sync", "tree", "async"):

@@ -53,39 +53,38 @@ def main(argv=None):
 
 
 def serve_ddc(args):
-    from repro.core import ddc
     from repro.data import spatial
-    from repro.serve import ClusterService, StreamConfig
+    from repro.ddc import DDC, CommMeter, DDCConfig
 
     spec = spatial.PHASE2_LAYOUTS[args.layout]
     pts = spec["make"](args.n)
-    cfg = ddc.DDCConfig(
+    cap = spatial.shard_capacity(args.n, args.shards)
+    cfg = DDCConfig(
         eps=spec["eps"], min_pts=spec["min_pts"], grid=spec["grid"],
-        max_clusters=spec["max_clusters"], max_verts=spec["max_verts"])
-    cap = max(len(p) for p in np.array_split(np.arange(args.n), args.shards))
-    batch = min(args.batch, cap)
-    meter = ddc.CommMeter()
-    svc = ClusterService(
-        StreamConfig(shards=args.shards, capacity=cap, max_batch=batch,
-                     ddc=cfg),
-        meter=meter)
+        max_clusters=spec["max_clusters"], max_verts=spec["max_verts"],
+        backend="stream", shards=args.shards, capacity=cap,
+        max_batch=min(args.batch, cap), max_queries=args.queries,
+    ).validate()
+    meter = CommMeter()
+    model = DDC(cfg, meter=meter)
 
     t0 = time.time()
     n_batches = 0
-    for shard, chunk in spatial.stream_batches(pts, args.shards, batch):
-        svc.ingest(shard, chunk)
-        svc.refresh()
+    for shard, chunk in spatial.stream_batches(pts, args.shards,
+                                               cfg.max_batch):
+        model.partial_fit(shard, chunk)
+        model.service.refresh()
         n_batches += 1
     ingest_s = time.time() - t0
 
     rng = np.random.default_rng(args.seed)
     q = rng.uniform(0, 1, (args.queries, 2)).astype(np.float32)
-    svc.query(q[:1])           # compile
+    model.query(q[:1])         # compile
     t0 = time.time()
-    labels = svc.query(q)
+    labels = model.query(q)
     query_s = time.time() - t0
 
-    out = svc.stats() | {
+    out = model.comm_stats() | {
         "mode": "ddc",
         "layout": args.layout,
         "ingest_batches": n_batches,

@@ -9,10 +9,13 @@ bulk data exchange.  This module is that serving path:
 * **Ingest buffers** — every shard owns a static-shape ring buffer
   ((capacity, 2) points + live mask), donated to the jitted append kernel
   so updates are in-place on device.  Appending past capacity evicts the
-  oldest points (ring overwrite); ``evict_oldest`` is the explicit
-  eviction API.  The append kernel branches under ``lax.cond`` between a
-  contiguous fast path (no wraparound: one ``dynamic_update_slice``) and
-  the general wrap/evict scatter.
+  oldest points (ring overwrite); ``evict_oldest`` (by ingest sequence)
+  and ``evict_older_than`` (TTL: by the per-point ingest timestamps
+  mirrored on the host) are the explicit eviction APIs — liveness holes
+  are legal, the live mirror is authoritative.  The append kernel is a
+  single static-shape scatter; the *slots* it writes are chosen on the
+  host mirrors (dead slots in ring order first, then the oldest live
+  points once the buffer is genuinely full).
 * **Dirty-shard phase 1** — ``refresh`` re-runs ``ddc.local_phase`` only
   on shards whose buffers changed since the last refresh; an emptied
   shard short-circuits to the cached ``ddc.empty_clusterset`` without
@@ -32,6 +35,11 @@ bulk data exchange.  This module is that serving path:
 * **Queries** — ``query`` maps read-traffic points to global cluster ids:
   nearest clustered live point within ``eps`` (DBSCAN's border rule
   applied to the frozen clustering), else noise.
+* **Snapshot/restore** — ``state_dict``/``from_state`` serialise the
+  full engine state (ring buffers, host mirrors, per-shard ClusterSets,
+  pair-d2 cache); the global set/maps/labels are recomputed on restore
+  from the saved inputs, so a restarted server resumes bit-identically
+  without a re-cluster (DESIGN.md §9).
 
 Communication model (``CommMeter``): shards and the aggregator are
 distinct nodes.  A full re-merge ships all K ClusterSets up
@@ -72,49 +80,33 @@ class StreamConfig:
 
 
 @functools.partial(jax.jit, donate_argnums=(0, 1))
-def _append(pts_buf, mask_buf, head, count, batch, nb):
-    """Ring-buffer append of ``nb`` valid rows of ``batch``.
+def _append(pts_buf, mask_buf, batch, idx, nb):
+    """Ring-buffer append: scatter the ``nb`` valid rows of ``batch``
+    into slots ``idx`` (bmax,) and mark them live, in place.
 
-    ``lax.cond`` picks between the contiguous fast path (the batch window
-    fits before the buffer end and nothing live is overwritten: one
-    dynamic_update_slice) and the general wraparound path (modulo
-    scatter), which is also the eviction path — slots wrapped onto are
-    the oldest live points and are overwritten in place.
+    The *choice* of slots happens on the host mirrors (``_write_slots``):
+    dead slots in ring order first, then — only when the buffer is
+    genuinely full — the oldest live points.  The kernel itself is a
+    plain static-shape scatter, so one compilation serves the contiguous
+    case, the wraparound case, and rings with TTL holes alike.
     """
     cap = pts_buf.shape[0]
     bmax = batch.shape[0]
     wvalid = jnp.arange(bmax) < nb
-
-    def fast(bufs):
-        pts, msk = bufs
-        wpts = jax.lax.dynamic_slice(pts, (head, 0), (bmax, 2))
-        wmsk = jax.lax.dynamic_slice(msk, (head,), (bmax,))
-        pts = jax.lax.dynamic_update_slice(
-            pts, jnp.where(wvalid[:, None], batch, wpts), (head, 0))
-        msk = jax.lax.dynamic_update_slice(msk, wmsk | wvalid, (head,))
-        return pts, msk
-
-    def wrap_evict(bufs):
-        pts, msk = bufs
-        idx = (head + jnp.arange(bmax)) % cap
-        safe = jnp.where(wvalid, idx, cap)           # invalid rows drop
-        pts = pts.at[safe].set(batch, mode="drop")
-        msk = msk.at[safe].set(True, mode="drop")
-        return pts, msk
-
-    fits = (head + bmax <= cap) & (count + nb <= cap)
-    pts_buf, mask_buf = jax.lax.cond(fits, fast, wrap_evict,
-                                     (pts_buf, mask_buf))
+    safe = jnp.where(wvalid, idx, cap)               # invalid rows drop
+    pts_buf = pts_buf.at[safe].set(batch, mode="drop")
+    mask_buf = mask_buf.at[safe].set(True, mode="drop")
     return pts_buf, mask_buf
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
-def _kill_oldest(mask_buf, tail, n):
-    """Clear the live bit of the ``n`` oldest slots (ring order)."""
-    cap = mask_buf.shape[0]
-    idx = (tail + jnp.arange(cap)) % cap
-    safe = jnp.where(jnp.arange(cap) < n, idx, cap)
-    return mask_buf.at[safe].set(False, mode="drop")
+def _kill_mask(mask_buf, kill):
+    """Clear the live bit of every slot marked in ``kill`` (cap,) bool.
+    One kernel serves every eviction flavour — oldest-n, TTL, clear —
+    because the *choice* of victims is made on the host mirrors (ingest
+    order and timestamps are a pure function of the call sequence, no
+    device sync needed)."""
+    return mask_buf & ~kill
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -180,9 +172,17 @@ class ClusterService:
             jnp.zeros((cap, 2), jnp.float32) for _ in range(k)]
         self._mask: List[jax.Array] = [jnp.zeros((cap,), bool) for _ in range(k)]
         # Host mirrors of the ring state (known exactly from the call
-        # sequence — no device sync on the write path).
+        # sequence — no device sync on the write path).  ``_live`` is the
+        # authoritative liveness mirror (TTL eviction punches holes, so
+        # head/count alone no longer describe the live set); ``_ts`` and
+        # ``_seq`` stamp each slot with its ingest timestamp and global
+        # ingest sequence number for TTL / oldest-first eviction.
         self._head = [0] * k
         self._count = [0] * k
+        self._live = [np.zeros((cap,), bool) for _ in range(k)]
+        self._ts = [np.full((cap,), -np.inf) for _ in range(k)]
+        self._seq = [np.full((cap,), -1, np.int64) for _ in range(k)]
+        self._next_seq = 0
         self._dirty = set(range(k))
         empty = ddc.empty_clusterset(self.cfg)
         self._local: List[ddc.ClusterSet] = [empty] * k
@@ -199,42 +199,100 @@ class ClusterService:
 
     # -- write path --------------------------------------------------------
 
-    def ingest(self, shard: int, points: np.ndarray) -> None:
+    def ingest(self, shard: int, points: np.ndarray,
+               t: float | np.ndarray | None = None) -> None:
         """Append ``points`` (n, 2) to ``shard``'s buffer, evicting the
-        oldest live points if the buffer would overflow."""
+        oldest live points if the buffer would overflow.
+
+        ``t`` stamps the batch for TTL eviction (``evict_older_than``):
+        a scalar (whole batch) or an (n,) array (per point).  Default:
+        the global ingest sequence number, so count-based and time-based
+        eviction coincide when the caller never supplies timestamps.
+        """
         cap, bmax = self.scfg.capacity, self.scfg.max_batch
         pts = np.asarray(points, np.float32).reshape(-1, 2)
-        for off in range(0, len(pts), bmax):
+        n = len(pts)
+        if t is None:
+            ts = np.arange(self._next_seq, self._next_seq + n, dtype=np.float64)
+        else:
+            ts = np.broadcast_to(np.asarray(t, np.float64), (n,))
+        for off in range(0, n, bmax):
             chunk = pts[off:off + bmax]
             nb = len(chunk)
+            idx = self._write_slots(shard, nb)
+            pad_idx = idx
             if nb < bmax:
                 chunk = np.pad(chunk, ((0, bmax - nb), (0, 0)))
+                pad_idx = np.pad(idx, (0, bmax - nb))
             self._pts[shard], self._mask[shard] = _append(
                 self._pts[shard], self._mask[shard],
-                self._head[shard], self._count[shard], jnp.asarray(chunk), nb)
-            self._head[shard] = (self._head[shard] + nb) % cap
-            self._count[shard] = min(self._count[shard] + nb, cap)
-        if len(pts):
+                jnp.asarray(chunk), jnp.asarray(pad_idx), nb)
+            self._live[shard][idx] = True
+            self._ts[shard][idx] = ts[off:off + nb]
+            self._seq[shard][idx] = np.arange(
+                self._next_seq + off, self._next_seq + off + nb)
+            self._head[shard] = int(idx[-1] + 1) % cap
+            self._count[shard] = int(self._live[shard].sum())
+        self._next_seq += n
+        if n:
             self._dirty.add(shard)
             self._stacked = None
 
-    def evict_oldest(self, shard: int, n: int) -> int:
-        """Evict the ``n`` oldest live points from ``shard``.  Returns the
-        number actually evicted."""
-        n = min(n, self._count[shard])
+    def _write_slots(self, shard: int, nb: int) -> np.ndarray:
+        """Pick the ``nb`` slots the next append chunk writes: dead slots
+        in ring order from the head first (so TTL holes are refilled
+        before anything live is touched), then — only when the buffer is
+        genuinely full — the oldest live points by ingest sequence.  In a
+        hole-free ring this reproduces the classic ring-buffer layout
+        exactly: the window [head, head+nb) while there is room, the
+        oldest window once it wraps."""
+        cap = self.scfg.capacity
+        live = self._live[shard]
+        order = (self._head[shard] + np.arange(cap)) % cap
+        dead = order[~live[order]]
+        take = dead[:nb]
+        if len(take) < nb:
+            live_idx = np.nonzero(live)[0]
+            oldest = live_idx[np.argsort(self._seq[shard][live_idx],
+                                         kind="stable")]
+            take = np.concatenate([take, oldest[:nb - len(take)]])
+        return take.astype(np.int64)
+
+    def _apply_kill(self, shard: int, kill: np.ndarray) -> int:
+        """Clear the live bits marked in ``kill`` (cap,) bool on device
+        and in the host mirrors.  Returns the number evicted."""
+        n = int(kill.sum())
         if n == 0:
             return 0
-        cap = self.scfg.capacity
-        tail = (self._head[shard] - self._count[shard]) % cap
-        self._mask[shard] = _kill_oldest(self._mask[shard], tail, n)
-        self._count[shard] -= n
+        self._mask[shard] = _kill_mask(self._mask[shard], jnp.asarray(kill))
+        self._live[shard][kill] = False
+        self._count[shard] = int(self._live[shard].sum())
         self._dirty.add(shard)
         self._stacked = None
         return n
 
+    def evict_oldest(self, shard: int, n: int) -> int:
+        """Evict the ``n`` oldest live points from ``shard`` (by ingest
+        sequence).  Returns the number actually evicted."""
+        live_idx = np.nonzero(self._live[shard])[0]
+        if n <= 0 or len(live_idx) == 0:
+            return 0
+        order = np.argsort(self._seq[shard][live_idx], kind="stable")
+        kill = np.zeros((self.scfg.capacity,), bool)
+        kill[live_idx[order[:n]]] = True
+        return self._apply_kill(shard, kill)
+
+    def evict_older_than(self, shard: int, t: float) -> int:
+        """TTL / windowed eviction: evict every live point on ``shard``
+        whose ingest timestamp is < ``t``.  Returns the eviction count.
+        The ring layout is untouched (holes are legal: liveness is a
+        mask, and the append wrap overwrites dead slots for free)."""
+        return self._apply_kill(
+            shard, self._live[shard] & (self._ts[shard] < t))
+
     def clear(self, shard: int) -> int:
         """Evict every live point from ``shard``."""
-        return self.evict_oldest(shard, self._count[shard])
+        return self._apply_kill(shard, self._live[shard].copy())
 
     # -- refresh (phase 1 on dirty shards + delta/full merge) --------------
 
@@ -301,11 +359,19 @@ class ClusterService:
     def query(self, points: np.ndarray) -> np.ndarray:
         """Global cluster id for each query point: the label of the
         nearest clustered live point within ``eps`` (DBSCAN's border
-        rule against the frozen clustering), else -1."""
+        rule against the frozen clustering), else -1.
+
+        A service with no live points and no global state yet (fresh, or
+        fully evicted before any refresh) short-circuits to all-noise
+        without compiling or running the merge pipeline: there is
+        nothing to match against, so the answer is -1 by definition.
+        """
+        q = np.asarray(points, np.float32).reshape(-1, 2)
+        if self._global is None and self.n_live() == 0:
+            return np.full((len(q),), -1, np.int32)
         if self._dirty or self._global is None:
             self.refresh()
         qmax = self.scfg.max_queries
-        q = np.asarray(points, np.float32).reshape(-1, 2)
         out = np.empty((len(q),), np.int32)
         if self._stacked is None:     # invalidated by ingest/evict
             self._stacked = (jnp.stack(self._pts), jnp.stack(self._mask))
@@ -362,6 +428,88 @@ class ClusterService:
         return (np.concatenate(pts_rows) if base else np.zeros((0, 2), np.float32),
                 parts,
                 np.concatenate(labels) if base else np.zeros((0,), np.int32))
+
+    # -- snapshot / restore -------------------------------------------------
+
+    def state_dict(self) -> Tuple[dict, dict]:
+        """Serialise the FULL engine state as (arrays, manifest).
+
+        Everything downstream of (ring buffers, dense labels, per-shard
+        ClusterSets, pair-d2 cache) is a deterministic jitted function of
+        those inputs, so the global set / slot maps / global labels are
+        *recomputed* on restore (``merge_from_d2`` + ``_global_labels``)
+        rather than stored — bit-identical by the DESIGN.md §8 argument,
+        and the snapshot stays minimal.
+        """
+        arrays = {
+            "pts": np.stack([np.asarray(p) for p in self._pts]),
+            "mask": np.stack([np.asarray(m) for m in self._mask]),
+            "dense": np.asarray(self._dense),
+            "live": np.stack(self._live),
+            "ts": np.stack(self._ts),
+            "seq": np.stack(self._seq),
+            "batch_contours": np.asarray(self._batch.contours),
+            "batch_counts": np.asarray(self._batch.counts),
+            "batch_sizes": np.asarray(self._batch.sizes),
+            "batch_valid": np.asarray(self._batch.valid),
+            "batch_overflow": np.asarray(self._batch.overflow),
+        }
+        if self._pair_d2 is not None:
+            arrays["pair_d2"] = np.asarray(self._pair_d2)
+        manifest = {
+            "shards": self.scfg.shards,
+            "capacity": self.scfg.capacity,
+            "max_batch": self.scfg.max_batch,
+            "max_queries": self.scfg.max_queries,
+            "merge_mode": self.scfg.merge_mode,
+            "head": list(self._head),
+            "count": list(self._count),
+            "dirty": sorted(self._dirty),
+            "next_seq": self._next_seq,
+            "refreshes": self.refreshes,
+            "delta_refreshes": self.delta_refreshes,
+            "has_global": self._global is not None,
+        }
+        return arrays, manifest
+
+    @classmethod
+    def from_state(cls, scfg: StreamConfig, arrays: dict, manifest: dict,
+                   meter: ddc.CommMeter | None = None) -> "ClusterService":
+        """Rebuild a service from ``state_dict`` output.  The restored
+        engine resumes bit-identically: same labels, same cached pair-d2
+        matrix, same delta/full behaviour on the next refresh — no
+        re-cluster of the live points."""
+        svc = cls(scfg, meter=meter)
+        k = scfg.shards
+        svc._pts = [jnp.asarray(arrays["pts"][i], jnp.float32)
+                    for i in range(k)]
+        svc._mask = [jnp.asarray(arrays["mask"][i], bool) for i in range(k)]
+        svc._dense = jnp.asarray(arrays["dense"], jnp.int32)
+        svc._live = [np.asarray(arrays["live"][i], bool) for i in range(k)]
+        svc._ts = [np.asarray(arrays["ts"][i], np.float64) for i in range(k)]
+        svc._seq = [np.asarray(arrays["seq"][i], np.int64) for i in range(k)]
+        svc._head = [int(h) for h in manifest["head"]]
+        svc._count = [int(c) for c in manifest["count"]]
+        svc._next_seq = int(manifest["next_seq"])
+        svc._dirty = set(int(s) for s in manifest["dirty"])
+        svc.refreshes = int(manifest["refreshes"])
+        svc.delta_refreshes = int(manifest["delta_refreshes"])
+        svc._batch = ddc.ClusterSet(
+            contours=jnp.asarray(arrays["batch_contours"], jnp.float32),
+            counts=jnp.asarray(arrays["batch_counts"], jnp.int32),
+            sizes=jnp.asarray(arrays["batch_sizes"], jnp.int32),
+            valid=jnp.asarray(arrays["batch_valid"], bool),
+            overflow=jnp.asarray(arrays["batch_overflow"], bool),
+        )
+        svc._local = [jax.tree.map(lambda x, i=i: x[i], svc._batch)
+                      for i in range(k)]
+        if manifest.get("has_global") and "pair_d2" in arrays:
+            svc._pair_d2 = jnp.asarray(arrays["pair_d2"], jnp.float32)
+            svc._global, svc._maps = ddc.merge_from_d2(
+                svc._batch, svc._pair_d2, svc.cfg)
+            svc._glabels = _global_labels(
+                svc._dense, jnp.stack(svc._mask), svc._maps)
+        return svc
 
     def stats(self) -> dict:
         out = {

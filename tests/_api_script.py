@@ -1,0 +1,52 @@
+"""Backend-equivalence property check for the `repro.ddc` facade, run
+under an 8-device CPU override by tests/test_ddc_api.py (the device
+count must be pinned before jax initialises, which pytest's process
+already did with 1 device).
+
+For one ``PHASE2_LAYOUTS`` layout (argv[1]) and every shard count in
+{2, 4, 8}: the ``host``, ``jit``, and ``stream`` backends must produce
+the IDENTICAL global clustering (same noise set, label bijection)
+through the single ``DDC.fit`` surface, and the tuned layout must pass
+the ``validate(sample=...)`` sizing probe.  Prints PASS lines; any
+exception fails.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+from repro.data import spatial
+from repro.ddc import DDC, DDCConfig, same_clustering
+
+N = 2048
+SHARD_COUNTS = (2, 4, 8)
+BACKENDS = ("host", "jit", "stream")
+
+
+def check_layout(name: str):
+    spec = spatial.PHASE2_LAYOUTS[name]
+    pts = spec["make"](N)
+    base = dict(eps=spec["eps"], min_pts=spec["min_pts"], grid=spec["grid"],
+                max_clusters=spec["max_clusters"], max_verts=spec["max_verts"])
+    # Tuned layouts must clear the DESIGN §7 sizing probe.
+    DDCConfig(**base).validate(sample=pts)
+    for k in SHARD_COUNTS:
+        labels = {}
+        for backend in BACKENDS:
+            model = DDC(DDCConfig(**base, backend=backend, shards=k))
+            labels[backend] = model.fit(pts).labels_
+            assert len(labels[backend]) == N, (
+                f"{name} k={k} {backend}: labels_ misaligned with input")
+        for backend in ("jit", "stream"):
+            assert same_clustering(labels["host"], labels[backend]), (
+                f"{name} k={k}: {backend} diverged from host")
+        n = len(set(labels["host"][labels["host"] >= 0].tolist()))
+        print(f"PASS {name} k={k} clusters={n}")
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    names = list(spatial.PHASE2_LAYOUTS) if which == "all" else [which]
+    for n in names:
+        check_layout(n)
+    print("ALL_OK")

@@ -34,7 +34,7 @@ def build_service(layout: str, k: int, meter=None, capacity=None,
                   max_batch=256):
     spec = spatial.PHASE2_LAYOUTS[layout]
     pts = spec["make"](N)
-    cap = capacity or max(len(p) for p in np.array_split(np.arange(N), k))
+    cap = capacity or spatial.shard_capacity(N, k)
     scfg = StreamConfig(shards=k, capacity=cap, max_batch=max_batch,
                         ddc=layout_cfg(spec))
     return ClusterService(scfg, meter=meter), pts, spec
