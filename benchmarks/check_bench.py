@@ -125,14 +125,17 @@ def check_serve(doc: dict):
     _require(len(rows) > 0, "serve: rows is empty")
     layouts = _typed(doc, "layouts", dict, "serve")
     _require(len(layouts) >= 3, "serve: fewer than 3 layouts")
-    _require(doc.get("backend") == "stream",
-             f"serve: backend tag {doc.get('backend')!r} != 'stream' — the "
-             f"artifact must record which repro.ddc backend produced it")
+    _require(doc.get("backend") in ("stream", "dist", "mixed"),
+             f"serve: backend tag {doc.get('backend')!r} not one of "
+             f"stream/dist/mixed — the artifact must record which "
+             f"repro.ddc backend(s) produced it")
     seen = set()
+    delta_by_cell: dict = {}
     for i, row in enumerate(rows):
         ctx = f"serve.rows[{i}]"
-        _require(_typed(row, "backend", str, ctx) == "stream",
-                 f"{ctx}: backend {row['backend']!r} != 'stream'")
+        be = _typed(row, "backend", str, ctx)
+        _require(be in ("stream", "dist"),
+                 f"{ctx}: backend {be!r} not 'stream' or 'dist'")
         layout = _typed(row, "layout", str, ctx)
         _require(layout in layouts, f"{ctx}: unknown layout {layout!r}")
         k = _typed(row, "shards", int, ctx)
@@ -160,18 +163,39 @@ def check_serve(doc: dict):
         _require(_typed(row, "d2_pairs_delta", int, ctx)
                  <= _typed(row, "d2_pairs_full", int, ctx),
                  f"{ctx}: delta recomputed more slot pairs than full")
-        seen.add((layout, k))
+        if "query_shards_scanned" in row:
+            _require(0 <= _typed(row, "query_shards_scanned", int, ctx)
+                     <= _typed(row, "query_shards_possible", int, ctx),
+                     f"{ctx}: scanned-shard counter exceeds the possible "
+                     f"shard scans")
+        seen.add((layout, be, k))
+        delta_by_cell[(layout, be, k)] = delta
     for layout in layouts:
-        ks = {k for (lo, k) in seen if lo == layout}
+        ks = {k for (lo, _, k) in seen if lo == layout}
         _require(len(ks) > 0, f"serve: no rows for {layout}")
         if not smoke:
             _require(max(ks) >= 16,
                      f"serve: {layout} never reaches 16 shards")
+    # Wherever a stream and a dist row cover the same cell, the dist
+    # engine's REAL axis-crossing bytes must not exceed the stream
+    # engine's metered delta bound (the tentpole acceptance bound).
+    for (layout, be, k), delta in delta_by_cell.items():
+        if be != "dist":
+            continue
+        ref = delta_by_cell.get((layout, "stream", k))
+        if ref is not None:
+            _require(delta <= ref,
+                     f"serve: dist axis bytes {delta} exceed the stream "
+                     f"delta bound {ref} at {layout}/k={k}")
     summary = _typed(doc, "summary", dict, "serve")
     _require(summary.get("all_match_host") is True,
              "serve.summary: all_match_host is not true")
     _require(summary.get("delta_lt_full_at_high_shards") is True,
              "serve.summary: delta-merge did not beat full re-merge")
+    if doc.get("backend") == "mixed":
+        _require(summary.get("dist_axis_bytes_le_stream_delta") is True,
+                 "serve.summary: dist axis bytes exceeded the stream "
+                 "delta bound")
 
 
 def check_file(path: str):

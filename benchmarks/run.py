@@ -48,10 +48,23 @@ def main() -> None:
     print()
     print("#" * 72)
     print("# Streaming serve engine: delta-merge vs full re-merge "
-          "(BENCH_serve.json)")
+          "(stream only; side artifact, committed BENCH_serve.json "
+          "untouched)")
     print("#" * 72)
+    # Stream engine only: the dist engine needs a forced multi-device
+    # CPU before jax initialises (python benchmarks/serve.py --backend
+    # dist), which this in-process driver cannot retrofit.  Write to a
+    # side path — the committed BENCH_serve.json is the mixed
+    # stream+dist artifact and must not be clobbered by a stream-only
+    # run.
+    import os
+    import tempfile
+
     from benchmarks import serve
-    sv_rows = serve.run()
+    sv_rows = serve.run(
+        backend="stream",
+        out_path=os.path.join(tempfile.gettempdir(),
+                              "BENCH_serve_stream.json"))
 
     print()
     print("#" * 72)
@@ -80,7 +93,8 @@ def main() -> None:
         us = f"{r['ms_doubling']*1e3:.0f}" if "ms_doubling" in r else ""
         print(f"phase1_{r['scenario']}_{r['n']},{us},{derived}")
     for r in sv_rows:
-        print(f"serve_{r['layout']}_k{r['shards']},{r['ingest_ms']*1e3:.0f},"
+        print(f"serve_{r['backend']}_{r['layout']}_k{r['shards']},"
+              f"{r['ingest_ms']*1e3:.0f},"
               f"delta/full_bytes={r['delta_bytes']}/{r['full_bytes']}"
               f"|query_us={r['query_ms']*1e3:.0f}")
     for r in k_rows:

@@ -1,5 +1,6 @@
 """Streaming serve-engine benchmark — the read/write latency and
-delta-merge comm-volume baseline.
+delta-merge comm-volume baseline, for the host-driven ``stream`` engine
+and the device-resident ``dist`` engine.
 
 Four spatial layouts (the shared ``PHASE2_LAYOUTS`` table) × shard
 counts 2–16.  Per cell the service ingests the full layout in
@@ -7,10 +8,14 @@ round-robin batches with an incremental refresh after every batch, then
 measures steady state:
 
 * **ingest_ms** — wall-clock of (ingest one batch + delta refresh);
-* **query_ms** — wall-clock of a 256-point query batch;
+* **query_ms** — wall-clock of a 256-point query batch (bbox-routed);
 * **delta vs full** — bytes on the wire and wall-clock for a
   single-dirty-shard delta refresh against a from-scratch re-merge
-  (both exact, same global state — the delta path's whole point);
+  (both exact, same global state — the delta path's whole point).  For
+  the ``stream`` rows the bytes are the host-metered model; for the
+  ``dist`` rows they are REAL axis-crossing transfers (dirty
+  ClusterSets up, slot-map rows down), so equal counts per cell are the
+  tentpole claim: moving the data plane onto devices adds no bytes;
 * **matches_host** — the final streaming labels must reproduce batch
   ``ddc_host`` on the live points bit-exactly (hard-fails otherwise),
   and the delta-maintained distance matrix must equal the recomputed
@@ -18,8 +23,8 @@ measures steady state:
 
 Writes ``BENCH_serve.json`` (schema ``serve-bench/v1``,
 ``benchmarks/check_bench.py``).  ``--smoke`` trims the shard sweep for
-CI.  Unlike the phase benches this needs no device-count override: the
-engine is host-driven over logical shards.
+CI; ``--backend`` picks stream/dist/both (dist forces a CPU device-count
+override before jax initialises: 8 for smoke, 16 for the full sweep).
 """
 from __future__ import annotations
 
@@ -29,21 +34,35 @@ import os
 import sys
 import time
 
-import numpy as np
-
-from repro.core import ddc
-from repro.data import spatial
-from repro.ddc import DDC, DDCConfig
-from repro.parallel import compress
-
 
 def _parse_args(argv=None):
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--smoke", action="store_true",
                    help="tiny CI subset: 2/4 shards only")
+    p.add_argument("--backend", choices=("stream", "dist", "both"),
+                   default="both", help="which serve engine(s) to bench")
     p.add_argument("--out", default=None, help="output JSON path")
     return p.parse_args(argv)
 
+
+_ARGS = None
+if __name__ == "__main__":
+    # The dist engine pins one shard per device; the CPU device count
+    # must be forced before jax initialises (i.e. before the repro
+    # imports below).
+    _ARGS = _parse_args()
+    if _ARGS.backend in ("dist", "both"):
+        _n = 8 if _ARGS.smoke else 16
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={_n}").strip()
+
+import numpy as np                                    # noqa: E402
+
+from repro.core import ddc                            # noqa: E402
+from repro.data import spatial                        # noqa: E402
+from repro.ddc import DDC, DDCConfig                  # noqa: E402
+from repro.parallel import compress                   # noqa: E402
 
 N = 2048
 BATCH = 256
@@ -51,14 +70,15 @@ QUERIES = 256
 LAYOUTS = spatial.PHASE2_LAYOUTS
 
 
-def bench_cell(name: str, spec: dict, k: int, reps: int = 3) -> dict:
+def bench_cell(name: str, spec: dict, k: int, backend: str,
+               reps: int = 3) -> dict:
     pts = spec["make"](N)
     cap = spatial.shard_capacity(N, k)
     batch = min(BATCH, cap)      # high shard counts shrink the buffers
     cfg = DDCConfig(
         eps=spec["eps"], min_pts=spec["min_pts"], grid=spec["grid"],
         max_clusters=spec["max_clusters"], max_verts=spec["max_verts"],
-        backend="stream", shards=k, capacity=cap, max_batch=batch,
+        backend=backend, shards=k, capacity=cap, max_batch=batch,
         max_queries=QUERIES).validate()
     meter = ddc.CommMeter()
     model = DDC(cfg, meter=meter)
@@ -99,6 +119,7 @@ def bench_cell(name: str, spec: dict, k: int, reps: int = 3) -> dict:
     q = rng.uniform(0, 1, (QUERIES, 2)).astype(np.float32)
     model.query(q)   # compile
     query_ms = min_time(lambda: model.query(q), reps)
+    routing = svc.routing_stats()
 
     live_pts, parts, labels = svc.live()
     host_labels, _, _ = ddc.ddc_host(
@@ -121,6 +142,8 @@ def bench_cell(name: str, spec: dict, k: int, reps: int = 3) -> dict:
         "buffer_bytes": cfg.core().buffer_bytes(),
         "d2_pairs_delta": cfg.max_clusters * k * cfg.max_clusters,
         "d2_pairs_full": (k * cfg.max_clusters) ** 2,
+        "query_shards_scanned": routing["query_shards_scanned"],
+        "query_shards_possible": routing["query_shards_possible"],
         "n_clusters": int(np.asarray(svc.global_set.valid).sum()),
         "matches_host": ddc.same_clustering(labels, host_labels),
         "delta_equals_full": bool(np.array_equal(d2_delta, d2_full)),
@@ -137,8 +160,9 @@ def min_time(fn, reps: int) -> float:
 
 
 def run(smoke: bool = False, out_path: str | None = None,
-        print_rows: bool = True):
+        backend: str = "both", print_rows: bool = True):
     shards = (2, 4) if smoke else (2, 4, 8, 16)
+    backends = ("stream", "dist") if backend == "both" else (backend,)
     rows = []
     layouts_meta = {}
     for name, spec in LAYOUTS.items():
@@ -146,15 +170,17 @@ def run(smoke: bool = False, out_path: str | None = None,
             key: spec[key] for key in ("eps", "min_pts", "grid", "max_verts",
                                        "max_clusters")
         } | {"n": N}
-        for k in shards:
-            row = bench_cell(name, spec, k)
-            rows.append(row)
-            if print_rows:
-                print(f"serve_{name}_k{k}: ingest={row['ingest_ms']}ms "
-                      f"query={row['query_ms']}ms "
-                      f"delta={row['delta_bytes']}B/{row['delta_refresh_ms']}ms "
-                      f"full={row['full_bytes']}B/{row['full_refresh_ms']}ms "
-                      f"match={row['matches_host']}")
+        for be in backends:
+            for k in shards:
+                row = bench_cell(name, spec, k, be)
+                rows.append(row)
+                if print_rows:
+                    print(f"serve_{be}_{name}_k{k}: "
+                          f"ingest={row['ingest_ms']}ms "
+                          f"query={row['query_ms']}ms "
+                          f"delta={row['delta_bytes']}B/{row['delta_refresh_ms']}ms "
+                          f"full={row['full_bytes']}B/{row['full_refresh_ms']}ms "
+                          f"match={row['matches_host']}")
 
     all_match = all(r["matches_host"] and r["delta_equals_full"] for r in rows)
     high_k = [r for r in rows if r["shards"] >= 8]
@@ -167,10 +193,20 @@ def run(smoke: bool = False, out_path: str | None = None,
         "mean_full_over_delta_bytes": round(float(np.mean(
             [r["full_bytes"] / r["delta_bytes"] for r in rows])), 2),
     }
+    stream_cells = {(r["layout"], r["shards"]): r["delta_bytes"]
+                    for r in rows if r["backend"] == "stream"}
+    if backend == "both":
+        # The tentpole claim: the device-resident engine's REAL
+        # axis-crossing bytes never exceed the stream engine's metered
+        # delta bound on the identical workload.
+        dist_ok = all(
+            r["delta_bytes"] <= stream_cells[(r["layout"], r["shards"])]
+            for r in rows if r["backend"] == "dist")
+        summary["dist_axis_bytes_le_stream_delta"] = dist_ok
     out = {
         "schema": "serve-bench/v1",
         "smoke": bool(smoke),
-        "backend": "stream",
+        "backend": "mixed" if backend == "both" else backend,
         "n": N,
         "batch": BATCH,
         "shards": list(shards),
@@ -186,14 +222,20 @@ def run(smoke: bool = False, out_path: str | None = None,
     if print_rows:
         print("summary:", json.dumps(summary))
         print("wrote", out_path)
-    if not all_match or not summary["delta_lt_full_at_high_shards"]:
-        bad = [(r["layout"], r["shards"]) for r in rows
+    failed = not all_match or not summary["delta_lt_full_at_high_shards"] \
+        or not summary.get("dist_axis_bytes_le_stream_delta", True)
+    if failed:
+        bad = [(r["backend"], r["layout"], r["shards"]) for r in rows
                if not (r["matches_host"] and r["delta_equals_full"])]
+        if backend == "both":
+            bad += [("dist>stream", r["layout"], r["shards"])
+                    for r in rows if r["backend"] == "dist"
+                    and r["delta_bytes"]
+                    > stream_cells[(r["layout"], r["shards"])]]
         print("SERVE BENCH FAILED:", bad, file=sys.stderr)
         raise SystemExit(1)
     return rows
 
 
 if __name__ == "__main__":
-    _args = _parse_args()
-    run(smoke=_args.smoke, out_path=_args.out)
+    run(smoke=_ARGS.smoke, out_path=_ARGS.out, backend=_ARGS.backend)

@@ -15,25 +15,28 @@ The canonical snippet — one config, one facade, any backend:
 
 ``--backend host`` is the paper-faithful NumPy oracle, ``jit`` the
 shard_map collective pipeline (sync/async/tree schedules), ``stream``
-the incremental delta-merge serve engine.  All three produce the same
-global clustering.
+the incremental delta-merge serve engine, ``dist`` the same engine with
+per-shard buffers pinned to their own mesh devices (real axis-crossing
+delta bytes).  All four produce the same global clustering.
 
   PYTHONPATH=src python examples/quickstart.py --backend host
   PYTHONPATH=src python examples/quickstart.py --backend jit --shards 8
   PYTHONPATH=src python examples/quickstart.py --backend stream
+  PYTHONPATH=src python examples/quickstart.py --backend dist --shards 8
 """
 import argparse
 import os
 import tempfile
 
 ap = argparse.ArgumentParser()
-ap.add_argument("--backend", choices=("host", "jit", "stream"), default="host")
+ap.add_argument("--backend", choices=("host", "jit", "stream", "dist"),
+                default="host")
 ap.add_argument("--shards", type=int, default=8)
 ap.add_argument("--n", type=int, default=6000)
 args = ap.parse_args()
 
-if args.backend == "jit":
-    # The jit backend lays shards over jax devices; the CPU device count
+if args.backend in ("jit", "dist"):
+    # These backends lay shards over jax devices; the CPU device count
     # must be pinned before jax initialises.
     os.environ["XLA_FLAGS"] = (
         os.environ.get("XLA_FLAGS", "")
@@ -97,7 +100,7 @@ def main():
     probes = np.array([[0.30, 0.65], [0.62, 0.22], [0.02, 0.98]])
     print(f"query {probes.tolist()} -> {model.query(probes).tolist()}")
 
-    if cfg.backend == "stream":
+    if cfg.backend in ("stream", "dist"):
         # Streaming extras: timestamped writes, TTL eviction, and a
         # bit-identical snapshot/restore round-trip.
         model.partial_fit(0, pts[:64], t=1.0)

@@ -356,6 +356,32 @@ def merge_from_d2(batch: ClusterSet, pair_d2: jax.Array,
     return merged, slot_of_old.reshape(k, c)
 
 
+def merge_delta(batch: ClusterSet, pair_d2: jax.Array | None,
+                dirty, cfg: DDCConfig
+                ) -> Tuple[ClusterSet, jax.Array, jax.Array]:
+    """The aggregator side of a delta exchange: fold axis-gathered dirty
+    ClusterSets into a cached slot-distance matrix and re-close the merge.
+
+    ``batch`` is the aggregator's mirror of every shard's ClusterSet with
+    the ``dirty`` rows already replaced by the freshly exchanged deltas
+    (the only payload that crossed the axis).  With a cached ``pair_d2``
+    the matrix is patched one dirty shard at a time (``update_pair_d2``);
+    with ``pair_d2=None`` (or ``dirty=None``) it is rebuilt from scratch
+    in the same difference form (``contour_pair_d2_exact``), so both
+    paths produce the bit-identical matrix — the DESIGN.md §8 exactness
+    argument.  Shared by the host-driven streaming engine
+    (serve/cluster_service.py) and the device-resident ``dist`` data
+    plane (serve/dist_service.py); returns (global, maps, pair_d2).
+    """
+    if pair_d2 is None or dirty is None:
+        pair_d2 = contour_pair_d2_exact(batch, cfg)
+    else:
+        for i in dirty:
+            pair_d2 = update_pair_d2(pair_d2, batch, i, cfg)
+    merged, maps = merge_from_d2(batch, pair_d2, cfg)
+    return merged, maps, pair_d2
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def merge_many(batch: ClusterSet, cfg: DDCConfig) -> Tuple[ClusterSet, jax.Array]:
     """Fold an arbitrary batch of ClusterSets into one (the paper's

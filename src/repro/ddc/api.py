@@ -14,7 +14,8 @@ One object, one lifecycle, every deployment style::
     model.comm_stats()                   # exact wire-byte accounting
     model.save("ckpt/"); DDC.load("ckpt/")   # bit-identical resume
 
-The backend (``host`` | ``jit`` | ``stream``) is a config knob; all
+The backend (``host`` | ``jit`` | ``stream`` | ``dist``) is a config
+knob; all
 backends produce the identical global clustering on the same per-shard
 membership.  Configs are validated at construction (``DDCConfig
 .validate``), so schedule/backend mismatches and DESIGN.md §7 sizing
@@ -70,7 +71,7 @@ class DDC:
 
     def expire(self, t: float) -> int:
         """Evict every point ingested with timestamp < ``t`` from all
-        shards (stream backend only).  Returns the eviction count."""
+        shards (stream/dist backends only).  Returns the eviction count."""
         return self.backend.expire(t)
 
     # -- read path ---------------------------------------------------------
@@ -168,6 +169,6 @@ class DDC:
 
     @property
     def service(self):
-        """The underlying ``ClusterService`` (stream backend only) for
+        """The underlying service engine (stream/dist backends only) for
         callers that need engine internals (benchmarks, tests)."""
         return self.backend.service

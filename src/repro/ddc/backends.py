@@ -12,16 +12,23 @@ delta-merge engine must be a config knob, not a caller rewrite.
   phase 1 per lane, phase 2 across the configured collective schedule.
 * ``stream`` — wraps ``repro.serve.ClusterService``: ring-buffer ingest,
   dirty-shard phase 1, exact delta-merge, TTL eviction, snapshots.
+* ``dist``   — wraps ``repro.serve.DistClusterService``: the same
+  streaming engine with every shard's buffers pinned to its own mesh
+  device (shard_map ingest/evict/phase 1); only delta ClusterSets and
+  slot-map rows cross the mesh axis, so its CommMeter counts are real
+  transfer bytes, not a model (DESIGN.md §10).  Needs
+  ``len(jax.devices()) >= shards``.
 
-All three consume the same per-shard membership (the block
+All four consume the same per-shard membership (the block
 ``np.array_split`` partition), so they produce the identical global
 clustering (``repro.core.ddc.same_clustering``) — asserted by
-``tests/test_ddc_api.py`` on every ``PHASE2_LAYOUTS`` layout.
+``tests/test_ddc_api.py`` / ``tests/test_dist_backend.py`` on every
+``PHASE2_LAYOUTS`` layout.
 
 Batch backends (``host``, ``jit``) support ``partial_fit`` by buffering
 per-shard points and lazily re-running the full pipeline on the next
-read; only ``stream`` repairs the global state incrementally and only
-``stream`` supports TTL eviction (``expire``).
+read; the streaming backends (``stream``, ``dist``) repair the global
+state incrementally and support TTL eviction (``expire``).
 """
 from __future__ import annotations
 
@@ -84,7 +91,8 @@ class Backend:
 
     def expire(self, t: float) -> int:
         raise ConfigError(
-            f"TTL eviction needs backend='stream', not {self.name!r}")
+            f"TTL eviction needs a streaming backend ('stream' or "
+            f"'dist'), not {self.name!r}")
 
     # read path
     def labels(self) -> np.ndarray:
@@ -278,37 +286,45 @@ class JitBackend(_BufferedBatchBackend):
 @register_backend("stream")
 class StreamBackend(Backend):
     """The online serve engine: ring-buffer ingest, dirty-shard phase 1,
-    exact delta-merge, point queries, TTL eviction, and bit-identical
-    snapshot/restore.  ``fit`` streams the batch in; ``partial_fit`` is
-    the native write path."""
+    exact delta-merge, bbox-routed point queries, TTL eviction, and
+    bit-identical snapshot/restore.  ``fit`` streams the batch in;
+    ``partial_fit`` is the native write path."""
 
     def __init__(self, cfg: DDCConfig, meter=None):
         super().__init__(cfg, meter)
         self._svc = None
 
+    @classmethod
+    def _svc_cls(cls):
+        from repro.serve import ClusterService
+
+        return ClusterService
+
     @property
     def service(self):
-        """The underlying ``ClusterService`` (lazily built: the ring
+        """The underlying service engine (lazily built: the ring
         capacity may be sized by the first ``fit``)."""
         if self._svc is None:
             if self.cfg.capacity is None:
                 raise ConfigError(
-                    "backend='stream' with partial_fit before fit needs an "
-                    "explicit capacity in DDCConfig (fit() would size it "
-                    "from the batch)")
+                    f"backend={self.name!r} with partial_fit before fit "
+                    f"needs an explicit capacity in DDCConfig (fit() would "
+                    f"size it from the batch)")
             self._svc = self._build(self.cfg.capacity)
         return self._svc
 
-    def _build(self, capacity: int):
-        from repro.serve import ClusterService, StreamConfig
+    def _stream_config(self, capacity: int):
+        from repro.serve import StreamConfig
 
-        return ClusterService(
-            StreamConfig(
-                shards=self.cfg.shards, capacity=capacity,
-                max_batch=min(self.cfg.max_batch, capacity),
-                max_queries=self.cfg.max_queries,
-                merge_mode=self.cfg.merge_mode, ddc=self.cfg.core()),
-            meter=self.meter)
+        return StreamConfig(
+            shards=self.cfg.shards, capacity=capacity,
+            max_batch=min(self.cfg.max_batch, capacity),
+            max_queries=self.cfg.max_queries,
+            merge_mode=self.cfg.merge_mode, ddc=self.cfg.core())
+
+    def _build(self, capacity: int):
+        return self._svc_cls()(self._stream_config(capacity),
+                               meter=self.meter)
 
     def fit(self, points: np.ndarray, t: float | None = None) -> None:
         from repro.data import spatial
@@ -353,7 +369,7 @@ class StreamBackend(Backend):
         return self.service.state_dict()
 
     def load_state(self, arrays, manifest) -> None:
-        from repro.serve import ClusterService, StreamConfig
+        from repro.serve import StreamConfig
 
         scfg = StreamConfig(
             shards=int(manifest["shards"]),
@@ -362,5 +378,24 @@ class StreamBackend(Backend):
             max_queries=int(manifest["max_queries"]),
             merge_mode=manifest["merge_mode"],
             ddc=self.cfg.core())
-        self._svc = ClusterService.from_state(
+        self._svc = self._svc_cls().from_state(
             scfg, arrays, manifest, meter=self.meter)
+
+
+@register_backend("dist")
+class DistBackend(StreamBackend):
+    """The device-resident streaming engine: the ``stream`` control
+    plane over a ``shard_map`` data plane that pins each shard's ring
+    buffers to its own mesh device.  Ingest/evict/dirty-shard phase 1
+    run lane-local; only delta ClusterSets (up) and slot-map rows
+    (down) cross the mesh axis, so ``comm_stats()`` reports *real*
+    axis-crossing bytes.  Bit-identical to ``stream`` (and ``host``) on
+    the same call sequence; snapshots are interchangeable with the
+    ``stream`` backend's.  Requires ``len(jax.devices()) >= shards``
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=K`` on CPU)."""
+
+    @classmethod
+    def _svc_cls(cls):
+        from repro.serve import DistClusterService
+
+        return DistClusterService

@@ -2,7 +2,8 @@
 
 One config describes the *whole* deployment — the phase-1/phase-2 math
 (mirroring ``repro.core.ddc.DDCConfig``), the backend that executes it
-(``host`` | ``jit`` | ``stream``), and the streaming-engine knobs.  The
+(``host`` | ``jit`` | ``stream`` | ``dist``), and the streaming-engine
+knobs.  The
 point of the split from the core config is ``validate()``: every
 backend/schedule compatibility rule and the DESIGN.md §7 sizing rule is
 checked when the config is built, not discovered as a silent cluster
@@ -152,6 +153,16 @@ class DDCConfig:
                 f"the async butterfly schedule needs a power-of-two shard "
                 f"count, got shards={self.shards}; use schedule='sync' or "
                 f"'tree', or round shards to a power of two")
+        if self.backend == "dist":
+            # The dist data plane lays one shard per mesh device; the
+            # mesh-vs-shards rule (and its fix-it message) lives in the
+            # data-plane module — surface it as a ConfigError here.
+            from repro.serve import dist_service
+
+            try:
+                dist_service.require_devices(self.shards)
+            except ValueError as e:
+                raise ConfigError(str(e)) from None
         if self.merge_mode not in MERGE_MODES:
             raise ConfigError(f"unknown merge_mode {self.merge_mode!r}")
         if self.max_batch < 1 or self.max_queries < 1:

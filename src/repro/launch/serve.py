@@ -3,23 +3,49 @@
 Two modes behind one entry point:
 
 * ``--mode lm`` (default) — batched LM request loop over prefill + decode.
-* ``--mode ddc`` — the streaming spatial-clustering service
-  (serve/cluster_service.py): ingest a synthetic layout shard-by-shard
-  with an incremental delta-merge refresh after every batch, then serve
-  point->cluster queries.  Prints a JSON line of ingest/query latency and
-  delta-path comm volume.
+* ``--mode ddc`` — the streaming spatial-clustering service: ingest a
+  synthetic layout shard-by-shard with an incremental delta-merge
+  refresh after every batch, then serve point->cluster queries.
+  ``--backend stream`` (default) is the host-driven engine
+  (serve/cluster_service.py); ``--backend dist`` pins each shard's
+  buffers to its own mesh device (serve/dist_service.py) so the printed
+  comm volume is real axis-crossing bytes.  Prints a JSON line of
+  ingest/query latency, delta-path comm volume, and query-routing
+  counters.
 
 CPU-scale examples:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --tiny \
       --requests 4 --prompt-len 32 --gen 16
   PYTHONPATH=src python -m repro.launch.serve --mode ddc --layout rings \
       --shards 8 --queries 512
+  PYTHONPATH=src python -m repro.launch.serve --mode ddc --backend dist \
+      --shards 8
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
 import time
+
+# One source of truth for the ddc-mode defaults: the pre-jax-init
+# device-count pass below and main()'s real parser must never drift.
+DEF_BACKEND = "stream"
+DEF_SHARDS = 4
+
+# --backend dist pins one shard per device: the CPU device count must be
+# forced before jax initialises, i.e. before the import below runs.
+if __name__ == "__main__":
+    _pre = argparse.ArgumentParser(add_help=False)
+    _pre.add_argument("--backend", default=DEF_BACKEND)
+    _pre.add_argument("--shards", type=int, default=DEF_SHARDS)
+    _ns, _ = _pre.parse_known_args(sys.argv[1:])
+    if _ns.backend == "dist":
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={_ns.shards}"
+        ).strip()
 
 import jax
 import numpy as np
@@ -40,7 +66,10 @@ def main(argv=None):
     # DDC streaming mode
     ap.add_argument("--layout", default="rings",
                     help="a data/spatial.py PHASE2_LAYOUTS name")
-    ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--backend", choices=("stream", "dist"),
+                    default=DEF_BACKEND,
+                    help="host-driven or device-resident serve engine")
+    ap.add_argument("--shards", type=int, default=DEF_SHARDS)
     ap.add_argument("--n", type=int, default=2048)
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--queries", type=int, default=256)
@@ -62,7 +91,7 @@ def serve_ddc(args):
     cfg = DDCConfig(
         eps=spec["eps"], min_pts=spec["min_pts"], grid=spec["grid"],
         max_clusters=spec["max_clusters"], max_verts=spec["max_verts"],
-        backend="stream", shards=args.shards, capacity=cap,
+        backend=args.backend, shards=args.shards, capacity=cap,
         max_batch=min(args.batch, cap), max_queries=args.queries,
     ).validate()
     meter = CommMeter()

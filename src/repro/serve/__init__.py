@@ -1,15 +1,21 @@
 """Serving substrates: the LM prefill/decode engine (engine.py) and the
-streaming DDC cluster service (cluster_service.py).
+streaming DDC cluster services (cluster_service.py: host-mirror control
+plane + host-driven data plane; dist_service.py: the same control plane
+over a device-resident shard_map data plane).
 
-The cluster-service re-export is lazy (PEP 562) so importing the LM
+The cluster-service re-exports are lazy (PEP 562) so importing the LM
 engine does not drag in the whole clustering stack, and vice versa.
 """
 
-_CLUSTER_EXPORTS = ("ClusterService", "StreamConfig")
+_CLUSTER_EXPORTS = ("ClusterService", "ShardControlPlane", "StreamConfig")
+_DIST_EXPORTS = ("DistClusterService",)
 
 
 def __getattr__(name):
     if name in _CLUSTER_EXPORTS:
         from repro.serve import cluster_service
         return getattr(cluster_service, name)
+    if name in _DIST_EXPORTS:
+        from repro.serve import dist_service
+        return getattr(dist_service, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -4,7 +4,22 @@ The paper's two-phase split (local clustering, then contour-only
 aggregation) is what makes an *online* clustering service cheap: when new
 points land on one shard, only that shard's local clusters change, and
 the global view is repaired by re-merging just the touched contours — no
-bulk data exchange.  This module is that serving path:
+bulk data exchange.  This module is that serving path, split into two
+halves (DESIGN.md §10):
+
+* **Control plane** (``ShardControlPlane``) — the host-mirror half every
+  engine shares: ring slot choice, liveness/ts/seq mirrors, eviction
+  victim selection, dirty-shard tracking, per-shard live-point bbox
+  mirrors (query routing), and shard-range validation.  Everything the
+  control plane decides is a pure function of the call sequence, so no
+  device sync ever sits on the write path.
+* **Data plane** — where the buffers live and kernels run.  This module's
+  ``ClusterService`` keeps them host-driven on the default device (one
+  process, K logical shards).  ``serve/dist_service.py`` pins each
+  shard's buffers to its own mesh device and runs the same control plane
+  over a ``shard_map`` data plane.
+
+Engine behaviour (shared by both data planes):
 
 * **Ingest buffers** — every shard owns a static-shape ring buffer
   ((capacity, 2) points + live mask), donated to the jitted append kernel
@@ -23,18 +38,23 @@ bulk data exchange.  This module is that serving path:
 * **Delta-merge phase 2** — the engine caches the per-shard ClusterSets
   *and* the (K·C, K·C) slot×slot contour-distance matrix behind
   ``ddc.merge_many``.  A delta refresh recomputes only the dirty shards'
-  rows/columns (``ddc.update_pair_d2``) and re-closes the transitive
-  closure (``ddc.merge_from_d2``).  This is **exact**, not approximate:
-  the matrix is a pure per-slot-pair function of the per-shard contours,
-  so patching dirty rows/columns reproduces the from-scratch matrix
-  bit-for-bit, and everything downstream (components, ranking, contour
-  rebuild) is a deterministic function of (batch, matrix).  In
-  particular, evictions that *split* a global cluster are handled
-  correctly — the closure is always recomputed over per-shard contours,
-  never over the (unsplittable) merged global contour.  DESIGN.md §8.
+  rows/columns and re-closes the transitive closure (``ddc.merge_delta``).
+  This is **exact**, not approximate: the matrix is a pure per-slot-pair
+  function of the per-shard contours, so patching dirty rows/columns
+  reproduces the from-scratch matrix bit-for-bit, and everything
+  downstream (components, ranking, contour rebuild) is a deterministic
+  function of (batch, matrix).  In particular, evictions that *split* a
+  global cluster are handled correctly — the closure is always recomputed
+  over per-shard contours, never over the (unsplittable) merged global
+  contour.  DESIGN.md §8.
 * **Queries** — ``query`` maps read-traffic points to global cluster ids:
   nearest clustered live point within ``eps`` (DBSCAN's border rule
-  applied to the frozen clustering), else noise.
+  applied to the frozen clustering), else noise.  Query chunks are
+  *routed*: only shards whose ε-dilated live bbox could contain a
+  neighbour of some chunk point are scanned (the control plane mirrors
+  each shard's bbox), and the scanned-shard counters surface in
+  ``stats()``/``comm_stats()``.  Routing is exact — a skipped shard holds
+  no point within ε of any query, so it could never supply a label.
 * **Snapshot/restore** — ``state_dict``/``from_state`` serialise the
   full engine state (ring buffers, host mirrors, per-shard ClusterSets,
   pair-d2 cache); the global set/maps/labels are recomputed on restore
@@ -47,7 +67,9 @@ distinct nodes.  A full re-merge ships all K ClusterSets up
 the dirty ones (|dirty|·B).  Both ship each shard its (C,) slot-map row
 back down (K·C·4 bytes).  Steady-state single-shard ingest therefore
 moves B + K·C·4 per refresh vs K·B + K·C·4 — the measurable
-minimal-communication claim (benchmarks/serve.py).
+minimal-communication claim (benchmarks/serve.py).  For this host-driven
+engine the model is metered; the ``dist`` data plane realises the same
+byte counts as real device-boundary transfers.
 """
 from __future__ import annotations
 
@@ -128,7 +150,9 @@ def _global_labels(dense, mask, maps):
 
 @jax.jit
 def _query_labels(q, qn, pts, mask, glabels, eps):
-    """Nearest clustered live point within eps, else -1.  q: (Qmax, 2)."""
+    """Nearest clustered live point within eps, else -1.  q: (Qmax, 2);
+    ``pts``/``mask``/``glabels`` carry a leading scanned-shard axis (any
+    width: the router stacks only candidate shards, padded rows masked)."""
     flat = pts.reshape(-1, 2)
     ok = (mask & (glabels >= 0)).reshape(-1)
     d2 = jnp.sum((q[:, None, :] - flat[None, :, :]) ** 2, axis=-1)
@@ -140,21 +164,19 @@ def _query_labels(q, qn, pts, mask, glabels, eps):
 
 
 # ---------------------------------------------------------------------------
-# The service
+# Control plane — the host-mirror half every data plane shares
 # ---------------------------------------------------------------------------
 
 
-class ClusterService:
-    """Host-driven streaming DDC engine over K logical shards.
+class ShardControlPlane:
+    """Host mirrors + write/evict/routing policy over K logical shards.
 
-    Write path: ``ingest(shard, points)`` appends into the shard's ring
-    buffer (evicting the oldest on overflow) and marks it dirty;
-    ``refresh()`` re-clusters dirty shards and delta-merges them into the
-    cached global state.  Read path: ``query(points)`` returns global
-    cluster ids against the last refreshed state (auto-refreshing if
-    writes are pending).  All device state is static-shape, so every
-    kernel compiles once per (StreamConfig) and is reused for the
-    lifetime of the service.
+    Subclasses supply the data plane: ``_append_chunk`` (write one padded
+    chunk into a shard's device buffer), ``_kill_device`` (clear live
+    bits on device), and ``_invalidate_reads``.  Everything else
+    — slot choice, eviction victim selection, TTL stamps, bbox mirrors,
+    dirty tracking, shard-range validation — is shared host logic that
+    never syncs with the device.
     """
 
     def __init__(self, scfg: StreamConfig, meter: ddc.CommMeter | None = None):
@@ -168,36 +190,60 @@ class ClusterService:
         self.cfg = scfg.ddc
         self.meter = meter
         k, cap = scfg.shards, scfg.capacity
-        self._pts: List[jax.Array] = [
-            jnp.zeros((cap, 2), jnp.float32) for _ in range(k)]
-        self._mask: List[jax.Array] = [jnp.zeros((cap,), bool) for _ in range(k)]
         # Host mirrors of the ring state (known exactly from the call
         # sequence — no device sync on the write path).  ``_live`` is the
         # authoritative liveness mirror (TTL eviction punches holes, so
         # head/count alone no longer describe the live set); ``_ts`` and
         # ``_seq`` stamp each slot with its ingest timestamp and global
         # ingest sequence number for TTL / oldest-first eviction.
+        # ``_hpts`` mirrors the coordinates the control plane itself
+        # wrote (ingest sees every point on the host), which is what
+        # keeps the per-shard bbox exact across evictions without ever
+        # reading the device buffers back.
         self._head = [0] * k
         self._count = [0] * k
         self._live = [np.zeros((cap,), bool) for _ in range(k)]
         self._ts = [np.full((cap,), -np.inf) for _ in range(k)]
         self._seq = [np.full((cap,), -1, np.int64) for _ in range(k)]
+        self._hpts = [np.zeros((cap, 2), np.float32) for _ in range(k)]
+        self._bbox: List[Optional[tuple]] = [None] * k
         self._next_seq = 0
         self._dirty = set(range(k))
+        # Aggregator mirror: the control plane caches every shard's last
+        # exchanged ClusterSet (stacked), the slot-distance matrix, and
+        # the merged global state — the state a delta refresh patches.
         empty = ddc.empty_clusterset(self.cfg)
         self._local: List[ddc.ClusterSet] = [empty] * k
         self._batch: ddc.ClusterSet = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (k,) + x.shape), empty)
-        self._dense = jnp.full((k, cap), -1, jnp.int32)
         self._pair_d2: Optional[jax.Array] = None
         self._global: Optional[ddc.ClusterSet] = None
         self._maps: Optional[jax.Array] = None
-        self._glabels = jnp.full((k, cap), -1, jnp.int32)
-        self._stacked: Optional[Tuple[jax.Array, jax.Array]] = None
         self.refreshes = 0
         self.delta_refreshes = 0
+        self.query_chunks = 0
+        self.query_shards_scanned = 0
 
-    # -- write path --------------------------------------------------------
+    # -- data-plane hooks ---------------------------------------------------
+
+    def _append_chunk(self, shard: int, chunk: np.ndarray,
+                      idx: np.ndarray, nb: int) -> None:
+        raise NotImplementedError
+
+    def _kill_device(self, shard: int, kill: np.ndarray) -> None:
+        raise NotImplementedError
+
+    def _invalidate_reads(self) -> None:
+        """Called whenever a write/evict changes the live point set."""
+
+    # -- write path ---------------------------------------------------------
+
+    def _check_shard(self, shard: int) -> int:
+        if not 0 <= shard < self.scfg.shards:
+            raise ValueError(
+                f"shard {shard} out of range [0, {self.scfg.shards}) for "
+                f"this {self.scfg.shards}-shard service")
+        return shard
 
     def ingest(self, shard: int, points: np.ndarray,
                t: float | np.ndarray | None = None) -> None:
@@ -209,6 +255,7 @@ class ClusterService:
         the global ingest sequence number, so count-based and time-based
         eviction coincide when the caller never supplies timestamps.
         """
+        self._check_shard(shard)
         cap, bmax = self.scfg.capacity, self.scfg.max_batch
         pts = np.asarray(points, np.float32).reshape(-1, 2)
         n = len(pts)
@@ -224,10 +271,9 @@ class ClusterService:
             if nb < bmax:
                 chunk = np.pad(chunk, ((0, bmax - nb), (0, 0)))
                 pad_idx = np.pad(idx, (0, bmax - nb))
-            self._pts[shard], self._mask[shard] = _append(
-                self._pts[shard], self._mask[shard],
-                jnp.asarray(chunk), jnp.asarray(pad_idx), nb)
+            self._append_chunk(shard, chunk, pad_idx, nb)
             self._live[shard][idx] = True
+            self._hpts[shard][idx] = chunk[:nb]
             self._ts[shard][idx] = ts[off:off + nb]
             self._seq[shard][idx] = np.arange(
                 self._next_seq + off, self._next_seq + off + nb)
@@ -236,7 +282,8 @@ class ClusterService:
         self._next_seq += n
         if n:
             self._dirty.add(shard)
-            self._stacked = None
+            self._bbox[shard] = None
+            self._invalidate_reads()
 
     def _write_slots(self, shard: int, nb: int) -> np.ndarray:
         """Pick the ``nb`` slots the next append chunk writes: dead slots
@@ -261,19 +308,22 @@ class ClusterService:
     def _apply_kill(self, shard: int, kill: np.ndarray) -> int:
         """Clear the live bits marked in ``kill`` (cap,) bool on device
         and in the host mirrors.  Returns the number evicted."""
+        self._check_shard(shard)
         n = int(kill.sum())
         if n == 0:
             return 0
-        self._mask[shard] = _kill_mask(self._mask[shard], jnp.asarray(kill))
+        self._kill_device(shard, kill)
         self._live[shard][kill] = False
         self._count[shard] = int(self._live[shard].sum())
         self._dirty.add(shard)
-        self._stacked = None
+        self._bbox[shard] = None
+        self._invalidate_reads()
         return n
 
     def evict_oldest(self, shard: int, n: int) -> int:
         """Evict the ``n`` oldest live points from ``shard`` (by ingest
         sequence).  Returns the number actually evicted."""
+        self._check_shard(shard)
         live_idx = np.nonzero(self._live[shard])[0]
         if n <= 0 or len(live_idx) == 0:
             return 0
@@ -287,12 +337,297 @@ class ClusterService:
         whose ingest timestamp is < ``t``.  Returns the eviction count.
         The ring layout is untouched (holes are legal: liveness is a
         mask, and the append wrap overwrites dead slots for free)."""
+        self._check_shard(shard)
         return self._apply_kill(
             shard, self._live[shard] & (self._ts[shard] < t))
 
     def clear(self, shard: int) -> int:
         """Evict every live point from ``shard``."""
+        self._check_shard(shard)
         return self._apply_kill(shard, self._live[shard].copy())
+
+    # -- query routing ------------------------------------------------------
+
+    def shard_bbox(self, shard: int) -> Optional[tuple]:
+        """(x0, y0, x1, y1) over ``shard``'s live points, or None when
+        the shard is empty.  Maintained from the host coordinate mirror
+        — updated lazily after any ingest/evict invalidated it — so
+        routing never touches the device buffers."""
+        self._check_shard(shard)
+        box = self._bbox[shard]
+        if box is None:
+            live = self._live[shard]
+            if not live.any():
+                box = ()
+            else:
+                p = self._hpts[shard][live]
+                box = (float(p[:, 0].min()), float(p[:, 1].min()),
+                       float(p[:, 0].max()), float(p[:, 1].max()))
+            self._bbox[shard] = box
+        return box or None
+
+    def _route(self, q: np.ndarray) -> np.ndarray:
+        """(K,) bool: shards whose ε-dilated live bbox could contain a
+        neighbour of ANY row of ``q`` — every other shard provably holds
+        no point within ε of any query, so skipping it cannot change a
+        single label (exactness).  The ε margin absorbs f32 rounding in
+        the distance kernel; counters feed ``stats()``.
+        """
+        k = self.scfg.shards
+        q64 = np.asarray(q, np.float64).reshape(-1, 2)
+        eps = float(self.cfg.eps) * (1.0 + 1e-6)
+        scan = np.zeros((k,), bool)
+        for s in range(k):
+            box = self.shard_bbox(s)
+            if box is None:
+                continue
+            x0, y0, x1, y1 = box
+            dx = np.maximum(np.maximum(x0 - q64[:, 0], 0.0), q64[:, 0] - x1)
+            dy = np.maximum(np.maximum(y0 - q64[:, 1], 0.0), q64[:, 1] - y1)
+            scan[s] = bool(np.any(dx * dx + dy * dy <= eps * eps))
+        self.query_chunks += 1
+        self.query_shards_scanned += int(scan.sum())
+        return scan
+
+    # -- aggregator (delta merge + metering) --------------------------------
+
+    def _merge_and_meter(self, dirty: list, mode: str,
+                         up_bytes: int | None = None) -> None:
+        """Fold the aggregator mirror into the global state and account
+        the up-leg of the exchange: a delta refresh ships |dirty|
+        ClusterSets, a full re-merge ships all K.  With ``up_bytes=None``
+        (the host-driven engine) the counters are the static model; the
+        ``dist`` data plane passes the bytes it MEASURED on its actual
+        device→aggregator fetches, so the model-vs-real equality the
+        bench asserts is an observation, not a restatement (DESIGN.md
+        §10).  Callers meter the map-rows down-leg via
+        ``_meter_maps_down`` once the maps exist."""
+        cfg = self.cfg
+        k, c = self.scfg.shards, cfg.max_clusters
+        bbytes = cfg.buffer_bytes()
+        if mode == "delta" and self._pair_d2 is not None:
+            self._global, self._maps, self._pair_d2 = ddc.merge_delta(
+                self._batch, self._pair_d2, dirty, cfg)
+            if self.meter is not None:
+                if up_bytes is None:
+                    self.meter.add_collective(len(dirty), bbytes)
+                else:
+                    self.meter.add_collective(1, up_bytes)
+            self.delta_refreshes += 1
+        else:
+            # Full rebuild goes through the same difference-form build
+            # (not the Pallas kernel): the cached matrix must stay
+            # bit-compatible with the delta patches on every backend —
+            # see ddc.contour_pair_d2_exact.
+            self._global, self._maps, self._pair_d2 = ddc.merge_delta(
+                self._batch, None, None, cfg)
+            if self.meter is not None:
+                self.meter.add_collective(
+                    *((k, bbytes) if up_bytes is None else (1, up_bytes)))
+        if self.meter is not None:
+            self.meter.add_merge(k, c)
+
+    def _meter_maps_down(self, nbytes: int | None = None) -> None:
+        """Account the down-leg: each shard's (C,) slot-map row.  The
+        model counts K·C·4; the dist engine passes the measured size of
+        the maps array it actually pushes."""
+        if self.meter is not None:
+            if nbytes is None:
+                self.meter.add_collective(
+                    self.scfg.shards, self.cfg.max_clusters * 4)
+            else:
+                self.meter.add_collective(1, nbytes)
+
+    def refresh(self, mode: str | None = None, force: bool = False):
+        raise NotImplementedError
+
+    def remerge_full(self):
+        """Recompute the global state from scratch (the baseline the
+        delta path is measured against).  Exactness contract: the result
+        is bit-identical to the incrementally maintained state."""
+        return self.refresh(mode="full", force=True)
+
+    # -- snapshot helpers (shared by both data planes) ----------------------
+
+    def _mirror_arrays(self) -> dict:
+        """The control-plane mirrors + aggregator ClusterSet cache, as
+        the numpy dict both engines' ``state_dict`` builds on."""
+        arrays = {
+            "live": np.stack(self._live),
+            "ts": np.stack(self._ts),
+            "seq": np.stack(self._seq),
+            "batch_contours": np.asarray(self._batch.contours),
+            "batch_counts": np.asarray(self._batch.counts),
+            "batch_sizes": np.asarray(self._batch.sizes),
+            "batch_valid": np.asarray(self._batch.valid),
+            "batch_overflow": np.asarray(self._batch.overflow),
+        }
+        if self._pair_d2 is not None:
+            arrays["pair_d2"] = np.asarray(self._pair_d2)
+        return arrays
+
+    def _mirror_manifest(self) -> dict:
+        return {
+            "shards": self.scfg.shards,
+            "capacity": self.scfg.capacity,
+            "max_batch": self.scfg.max_batch,
+            "max_queries": self.scfg.max_queries,
+            "merge_mode": self.scfg.merge_mode,
+            "head": list(self._head),
+            "count": list(self._count),
+            "dirty": sorted(self._dirty),
+            "next_seq": self._next_seq,
+            "refreshes": self.refreshes,
+            "delta_refreshes": self.delta_refreshes,
+            "query_chunks": self.query_chunks,
+            "query_shards_scanned": self.query_shards_scanned,
+            "has_global": self._global is not None,
+        }
+
+    def _restore_mirrors(self, arrays: dict, manifest: dict) -> None:
+        """Rebuild every host mirror — including the coordinate mirror
+        backing the bbox router — from ``state_dict`` output."""
+        k = self.scfg.shards
+        self._live = [np.asarray(arrays["live"][i], bool) for i in range(k)]
+        self._ts = [np.asarray(arrays["ts"][i], np.float64) for i in range(k)]
+        self._seq = [np.asarray(arrays["seq"][i], np.int64) for i in range(k)]
+        self._hpts = [np.asarray(arrays["pts"][i], np.float32).copy()
+                      for i in range(k)]
+        self._bbox = [None] * k
+        self._head = [int(h) for h in manifest["head"]]
+        self._count = [int(c) for c in manifest["count"]]
+        self._next_seq = int(manifest["next_seq"])
+        self._dirty = set(int(s) for s in manifest["dirty"])
+        self.refreshes = int(manifest["refreshes"])
+        self.delta_refreshes = int(manifest["delta_refreshes"])
+        self.query_chunks = int(manifest.get("query_chunks", 0))
+        self.query_shards_scanned = int(
+            manifest.get("query_shards_scanned", 0))
+
+    def _restore_batch(self, arrays: dict) -> None:
+        """Rebuild the aggregator ClusterSet mirror (and the per-shard
+        views) from ``state_dict`` output."""
+        k = self.scfg.shards
+        self._batch = ddc.ClusterSet(
+            contours=jnp.asarray(arrays["batch_contours"], jnp.float32),
+            counts=jnp.asarray(arrays["batch_counts"], jnp.int32),
+            sizes=jnp.asarray(arrays["batch_sizes"], jnp.int32),
+            valid=jnp.asarray(arrays["batch_valid"], bool),
+            overflow=jnp.asarray(arrays["batch_overflow"], bool),
+        )
+        self._local = [jax.tree.map(lambda x, i=i: x[i], self._batch)
+                       for i in range(k)]
+
+    # -- introspection ------------------------------------------------------
+
+    def n_live(self) -> int:
+        return sum(self._count)
+
+    def _live_buffers(self):
+        """Data-plane hook for ``live()``: fetch (pts (K, cap, 2),
+        mask (K, cap), glabels (K, cap)) as numpy arrays."""
+        raise NotImplementedError
+
+    def live(self) -> Tuple[np.ndarray, list, np.ndarray]:
+        """Materialise the live state for host-side checks.
+
+        Returns (points (L, 2), parts, labels (L,)): ``parts[s]`` indexes
+        the rows of ``points`` held by shard ``s`` — exactly the explicit
+        partition ``ddc.ddc_host`` accepts, so streaming≡batch
+        equivalence is checked on identical per-shard memberships.
+        """
+        if self._dirty or self._global is None:
+            self.refresh()
+        pts, mask, glab = self._live_buffers()
+        pts_rows, parts, labels = [], [], []
+        base = 0
+        for s in range(self.scfg.shards):
+            msk = mask[s]
+            pts_rows.append(pts[s][msk])
+            labels.append(glab[s][msk])
+            parts.append(np.arange(base, base + int(msk.sum())))
+            base += int(msk.sum())
+        return (np.concatenate(pts_rows) if base else np.zeros((0, 2), np.float32),
+                parts,
+                np.concatenate(labels) if base else np.zeros((0,), np.int32))
+
+    def local_set(self, shard: int) -> ddc.ClusterSet:
+        self._check_shard(shard)
+        return self._local[shard]
+
+    @property
+    def pair_d2(self) -> Optional[jax.Array]:
+        """Snapshot (copy) of the cached slot-distance matrix.  The live
+        buffer is donated to the next delta refresh, so handing out a
+        reference would leave callers holding a deleted array."""
+        return None if self._pair_d2 is None else jnp.array(self._pair_d2)
+
+    @property
+    def global_set(self) -> Optional[ddc.ClusterSet]:
+        return self._global
+
+    def routing_stats(self) -> dict:
+        return {
+            "query_chunks": self.query_chunks,
+            "query_shards_scanned": self.query_shards_scanned,
+            "query_shards_possible": self.query_chunks * self.scfg.shards,
+        }
+
+    def stats(self) -> dict:
+        out = {
+            "shards": self.scfg.shards,
+            "capacity": self.scfg.capacity,
+            "n_live": self.n_live(),
+            "refreshes": self.refreshes,
+            "delta_refreshes": self.delta_refreshes,
+            "n_clusters": int(np.asarray(self._global.valid).sum())
+            if self._global is not None else 0,
+        } | self.routing_stats()
+        if self.meter is not None:
+            out["comm"] = self.meter.snapshot()
+        return out
+
+
+# ---------------------------------------------------------------------------
+# The host-driven service
+# ---------------------------------------------------------------------------
+
+
+class ClusterService(ShardControlPlane):
+    """Host-driven streaming DDC engine over K logical shards.
+
+    Write path: ``ingest(shard, points)`` appends into the shard's ring
+    buffer (evicting the oldest on overflow) and marks it dirty;
+    ``refresh()`` re-clusters dirty shards and delta-merges them into the
+    cached global state.  Read path: ``query(points)`` returns global
+    cluster ids against the last refreshed state (auto-refreshing if
+    writes are pending), scanning only bbox-routed candidate shards.
+    All device state is static-shape, so every kernel compiles once per
+    (StreamConfig) and is reused for the lifetime of the service.
+    """
+
+    def __init__(self, scfg: StreamConfig, meter: ddc.CommMeter | None = None):
+        super().__init__(scfg, meter)
+        k, cap = scfg.shards, scfg.capacity
+        self._pts: List[jax.Array] = [
+            jnp.zeros((cap, 2), jnp.float32) for _ in range(k)]
+        self._mask: List[jax.Array] = [jnp.zeros((cap,), bool) for _ in range(k)]
+        self._dense = jnp.full((k, cap), -1, jnp.int32)
+        self._glabels = jnp.full((k, cap), -1, jnp.int32)
+        self._stack_cache: dict = {}
+
+    # -- data plane ---------------------------------------------------------
+
+    def _append_chunk(self, shard, chunk, idx, nb) -> None:
+        self._pts[shard], self._mask[shard] = _append(
+            self._pts[shard], self._mask[shard],
+            jnp.asarray(chunk), jnp.asarray(idx), nb)
+
+    def _kill_device(self, shard, kill) -> None:
+        self._mask[shard] = _kill_mask(self._mask[shard], jnp.asarray(kill))
+
+    def _invalidate_reads(self) -> None:
+        self._stack_cache.clear()
 
     # -- refresh (phase 1 on dirty shards + delta/full merge) --------------
 
@@ -305,7 +640,6 @@ class ClusterService:
         """
         mode = mode or self.scfg.merge_mode
         cfg = self.cfg
-        k, c = self.scfg.shards, cfg.max_clusters
         dirty = sorted(self._dirty)
         if not dirty and self._global is not None and not force:
             return self._global
@@ -322,37 +656,13 @@ class ClusterService:
             self._batch = _set_row(self._batch, cs, i)
             self._dense = _set_row(self._dense, dense, i)
 
-        bbytes = cfg.buffer_bytes()
-        if mode == "delta" and self._pair_d2 is not None:
-            for i in dirty:
-                self._pair_d2 = ddc.update_pair_d2(
-                    self._pair_d2, self._batch, i, cfg)
-            if self.meter is not None:
-                self.meter.add_collective(len(dirty), bbytes)
-            self.delta_refreshes += 1
-        else:
-            # Difference-form build (not the Pallas kernel): the cached
-            # matrix must stay bit-compatible with the delta patches on
-            # every backend — see ddc.contour_pair_d2_exact.
-            self._pair_d2 = ddc.contour_pair_d2_exact(self._batch, cfg)
-            if self.meter is not None:
-                self.meter.add_collective(k, bbytes)
-        if self.meter is not None:
-            self.meter.add_merge(k, c)
-            self.meter.add_collective(k, c * 4)   # per-shard map rows down
-        self._global, self._maps = ddc.merge_from_d2(
-            self._batch, self._pair_d2, cfg)
+        self._merge_and_meter(dirty, mode)
+        self._meter_maps_down()
         self._glabels = _global_labels(
             self._dense, jnp.stack(self._mask), self._maps)
         self._dirty.clear()
         self.refreshes += 1
         return self._global
-
-    def remerge_full(self):
-        """Recompute the global state from scratch (the baseline the
-        delta path is measured against).  Exactness contract: the result
-        is bit-identical to the incrementally maintained state."""
-        return self.refresh(mode="full", force=True)
 
     # -- read path ---------------------------------------------------------
 
@@ -361,10 +671,12 @@ class ClusterService:
         nearest clustered live point within ``eps`` (DBSCAN's border
         rule against the frozen clustering), else -1.
 
-        A service with no live points and no global state yet (fresh, or
-        fully evicted before any refresh) short-circuits to all-noise
-        without compiling or running the merge pipeline: there is
-        nothing to match against, so the answer is -1 by definition.
+        Each chunk is routed to the shards whose ε-dilated bbox could
+        contain a neighbour (``_route``); a chunk that reaches no shard
+        short-circuits to noise without running a kernel.  A service with
+        no live points and no global state yet (fresh, or fully evicted
+        before any refresh) short-circuits to all-noise without compiling
+        or running the merge pipeline.
         """
         q = np.asarray(points, np.float32).reshape(-1, 2)
         if self._global is None and self.n_live() == 0:
@@ -373,61 +685,51 @@ class ClusterService:
             self.refresh()
         qmax = self.scfg.max_queries
         out = np.empty((len(q),), np.int32)
-        if self._stacked is None:     # invalidated by ingest/evict
-            self._stacked = (jnp.stack(self._pts), jnp.stack(self._mask))
-        pts, mask = self._stacked
         for off in range(0, len(q), qmax):
             chunk = q[off:off + qmax]
             nq = len(chunk)
+            scan = self._route(chunk)
+            sel = np.nonzero(scan)[0]
+            if len(sel) == 0:
+                out[off:off + nq] = -1
+                continue
+            pts, mask, rows = self._scan_stack(sel)
+            glab = jnp.take(self._glabels, rows, axis=0)
             if nq < qmax:
                 chunk = np.pad(chunk, ((0, qmax - nq), (0, 0)))
-            lab = _query_labels(jnp.asarray(chunk), nq, pts, mask,
-                                self._glabels, self.cfg.eps)
+            lab = _query_labels(jnp.asarray(chunk), nq, pts, mask, glab,
+                                self.cfg.eps)
             out[off:off + nq] = np.asarray(lab)[:nq]
         return out
 
+    def _scan_stack(self, sel: np.ndarray):
+        """Stack the scanned shards' buffers, padded to a power-of-two
+        width so the query kernel compiles at most log2(K)+1 times.
+        Padded rows point at shard 0 with a zeroed mask (inert).  Cached
+        per scan set; any ingest/evict invalidates (the buffers are
+        replaced by donation)."""
+        key = tuple(int(s) for s in sel)
+        hit = self._stack_cache.get(key)
+        if hit is None:
+            spad = 1 << max(0, (len(sel) - 1).bit_length())
+            pad = np.concatenate(
+                [sel, np.zeros((spad - len(sel),), np.int64)])
+            valid = np.arange(spad) < len(sel)
+            pts = jnp.stack([self._pts[s] for s in pad])
+            mask = jnp.stack([self._mask[s] for s in pad]) \
+                & jnp.asarray(valid)[:, None]
+            if len(self._stack_cache) > 16:
+                self._stack_cache.clear()
+            hit = (pts, mask, jnp.asarray(pad))
+            self._stack_cache[key] = hit
+        return hit
+
     # -- introspection -----------------------------------------------------
 
-    def local_set(self, shard: int) -> ddc.ClusterSet:
-        return self._local[shard]
-
-    @property
-    def pair_d2(self) -> Optional[jax.Array]:
-        """Snapshot (copy) of the cached slot-distance matrix.  The live
-        buffer is donated to the next delta refresh, so handing out a
-        reference would leave callers holding a deleted array."""
-        return None if self._pair_d2 is None else jnp.array(self._pair_d2)
-
-    @property
-    def global_set(self) -> Optional[ddc.ClusterSet]:
-        return self._global
-
-    def n_live(self) -> int:
-        return sum(self._count)
-
-    def live(self) -> Tuple[np.ndarray, List[np.ndarray], np.ndarray]:
-        """Materialise the live state for host-side checks.
-
-        Returns (points (L, 2), parts, labels (L,)): ``parts[s]`` indexes
-        the rows of ``points`` held by shard ``s`` — exactly the explicit
-        partition ``ddc.ddc_host`` accepts, so streaming≡batch
-        equivalence is checked on identical per-shard memberships.
-        """
-        if self._dirty or self._global is None:
-            self.refresh()
-        pts_rows, parts, labels = [], [], []
-        base = 0
-        for s in range(self.scfg.shards):
-            msk = np.asarray(self._mask[s])
-            live = np.asarray(self._pts[s])[msk]
-            labs = np.asarray(self._glabels[s])[msk]
-            pts_rows.append(live)
-            labels.append(labs)
-            parts.append(np.arange(base, base + len(live)))
-            base += len(live)
-        return (np.concatenate(pts_rows) if base else np.zeros((0, 2), np.float32),
-                parts,
-                np.concatenate(labels) if base else np.zeros((0,), np.int32))
+    def _live_buffers(self):
+        return (np.stack([np.asarray(p) for p in self._pts]),
+                np.stack([np.asarray(m) for m in self._mask]),
+                np.asarray(self._glabels))
 
     # -- snapshot / restore -------------------------------------------------
 
@@ -439,38 +741,15 @@ class ClusterService:
         those inputs, so the global set / slot maps / global labels are
         *recomputed* on restore (``merge_from_d2`` + ``_global_labels``)
         rather than stored — bit-identical by the DESIGN.md §8 argument,
-        and the snapshot stays minimal.
+        and the snapshot stays minimal.  The bbox mirrors rebuild from
+        the saved buffers (live slots only), so they are not stored.
         """
         arrays = {
             "pts": np.stack([np.asarray(p) for p in self._pts]),
             "mask": np.stack([np.asarray(m) for m in self._mask]),
             "dense": np.asarray(self._dense),
-            "live": np.stack(self._live),
-            "ts": np.stack(self._ts),
-            "seq": np.stack(self._seq),
-            "batch_contours": np.asarray(self._batch.contours),
-            "batch_counts": np.asarray(self._batch.counts),
-            "batch_sizes": np.asarray(self._batch.sizes),
-            "batch_valid": np.asarray(self._batch.valid),
-            "batch_overflow": np.asarray(self._batch.overflow),
-        }
-        if self._pair_d2 is not None:
-            arrays["pair_d2"] = np.asarray(self._pair_d2)
-        manifest = {
-            "shards": self.scfg.shards,
-            "capacity": self.scfg.capacity,
-            "max_batch": self.scfg.max_batch,
-            "max_queries": self.scfg.max_queries,
-            "merge_mode": self.scfg.merge_mode,
-            "head": list(self._head),
-            "count": list(self._count),
-            "dirty": sorted(self._dirty),
-            "next_seq": self._next_seq,
-            "refreshes": self.refreshes,
-            "delta_refreshes": self.delta_refreshes,
-            "has_global": self._global is not None,
-        }
-        return arrays, manifest
+        } | self._mirror_arrays()
+        return arrays, self._mirror_manifest()
 
     @classmethod
     def from_state(cls, scfg: StreamConfig, arrays: dict, manifest: dict,
@@ -485,24 +764,8 @@ class ClusterService:
                     for i in range(k)]
         svc._mask = [jnp.asarray(arrays["mask"][i], bool) for i in range(k)]
         svc._dense = jnp.asarray(arrays["dense"], jnp.int32)
-        svc._live = [np.asarray(arrays["live"][i], bool) for i in range(k)]
-        svc._ts = [np.asarray(arrays["ts"][i], np.float64) for i in range(k)]
-        svc._seq = [np.asarray(arrays["seq"][i], np.int64) for i in range(k)]
-        svc._head = [int(h) for h in manifest["head"]]
-        svc._count = [int(c) for c in manifest["count"]]
-        svc._next_seq = int(manifest["next_seq"])
-        svc._dirty = set(int(s) for s in manifest["dirty"])
-        svc.refreshes = int(manifest["refreshes"])
-        svc.delta_refreshes = int(manifest["delta_refreshes"])
-        svc._batch = ddc.ClusterSet(
-            contours=jnp.asarray(arrays["batch_contours"], jnp.float32),
-            counts=jnp.asarray(arrays["batch_counts"], jnp.int32),
-            sizes=jnp.asarray(arrays["batch_sizes"], jnp.int32),
-            valid=jnp.asarray(arrays["batch_valid"], bool),
-            overflow=jnp.asarray(arrays["batch_overflow"], bool),
-        )
-        svc._local = [jax.tree.map(lambda x, i=i: x[i], svc._batch)
-                      for i in range(k)]
+        svc._restore_mirrors(arrays, manifest)
+        svc._restore_batch(arrays)
         if manifest.get("has_global") and "pair_d2" in arrays:
             svc._pair_d2 = jnp.asarray(arrays["pair_d2"], jnp.float32)
             svc._global, svc._maps = ddc.merge_from_d2(
@@ -510,17 +773,3 @@ class ClusterService:
             svc._glabels = _global_labels(
                 svc._dense, jnp.stack(svc._mask), svc._maps)
         return svc
-
-    def stats(self) -> dict:
-        out = {
-            "shards": self.scfg.shards,
-            "capacity": self.scfg.capacity,
-            "n_live": self.n_live(),
-            "refreshes": self.refreshes,
-            "delta_refreshes": self.delta_refreshes,
-            "n_clusters": int(np.asarray(self._global.valid).sum())
-            if self._global is not None else 0,
-        }
-        if self.meter is not None:
-            out["comm"] = self.meter.snapshot()
-        return out

@@ -4,8 +4,8 @@ count must be pinned before jax initialises, which pytest's process
 already did with 1 device).
 
 For one ``PHASE2_LAYOUTS`` layout (argv[1]) and every shard count in
-{2, 4, 8}: the ``host``, ``jit``, and ``stream`` backends must produce
-the IDENTICAL global clustering (same noise set, label bijection)
+{2, 4, 8}: the ``host``, ``jit``, ``stream``, and ``dist`` backends must
+produce the IDENTICAL global clustering (same noise set, label bijection)
 through the single ``DDC.fit`` surface, and the tuned layout must pass
 the ``validate(sample=...)`` sizing probe.  Prints PASS lines; any
 exception fails.
@@ -20,7 +20,7 @@ from repro.ddc import DDC, DDCConfig, same_clustering
 
 N = 2048
 SHARD_COUNTS = (2, 4, 8)
-BACKENDS = ("host", "jit", "stream")
+BACKENDS = ("host", "jit", "stream", "dist")
 
 
 def check_layout(name: str):
@@ -37,7 +37,7 @@ def check_layout(name: str):
             labels[backend] = model.fit(pts).labels_
             assert len(labels[backend]) == N, (
                 f"{name} k={k} {backend}: labels_ misaligned with input")
-        for backend in ("jit", "stream"):
+        for backend in ("jit", "stream", "dist"):
             assert same_clustering(labels["host"], labels[backend]), (
                 f"{name} k={k}: {backend} diverged from host")
         n = len(set(labels["host"][labels["host"] >= 0].tolist()))

@@ -1,0 +1,200 @@
+"""dist≡stream≡host equivalence checks for the device-resident backend,
+run under an 8-device CPU override by tests/test_dist_backend.py (the
+device count must be pinned before jax initialises, which pytest's
+process already did with 1 device).
+
+Modes (argv[1]):
+
+* a ``PHASE2_LAYOUTS`` name (or ``all``) — for every shard count in
+  {2, 4, 8}: stream the layout into the ``dist`` and ``stream`` backends
+  with identical ingest schedules and assert (1) global labels are
+  bit-identical between the two engines AND ``same_clustering`` against
+  batch ``ddc_host`` on the live points, (2) the delta-maintained
+  pair-d2 matrix is bit-identical to the stream engine's and to a
+  from-scratch full re-merge, (3) the CommMeter counted EXACTLY
+  |dirty|·B + K·C·4 axis-crossing bytes for a single-dirty-shard delta
+  refresh and K·B + K·C·4 for a full re-merge, (4) routed queries agree
+  label-for-label, and (5) snapshot → restore resumes bit-identically.
+* ``orderings`` — hypothesis-driven shuffled ingest/evict interleavings:
+  any order must land on the same clustering as batch ``ddc_host`` and
+  bit-match the stream engine fed the same sequence.
+
+Prints PASS lines; any exception fails.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np
+
+from repro.core import ddc as core_ddc
+from repro.data import spatial
+from repro.ddc import CommMeter, DDC, DDCConfig, same_clustering
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from _hyp import HAVE_HYPOTHESIS, given, settings, st  # noqa: E402
+
+N = 2048
+SHARD_COUNTS = (2, 4, 8)
+
+
+def build(layout: str, k: int, backend: str, meter=None,
+          capacity: int | None = None, max_batch: int = 256):
+    spec = spatial.PHASE2_LAYOUTS[layout]
+    cap = capacity or spatial.shard_capacity(N, k)
+    cfg = DDCConfig(
+        eps=spec["eps"], min_pts=spec["min_pts"], grid=spec["grid"],
+        max_clusters=spec["max_clusters"], max_verts=spec["max_verts"],
+        backend=backend, shards=k, capacity=cap,
+        max_batch=min(max_batch, cap)).validate()
+    return DDC(cfg, meter=meter)
+
+
+def stream_in(model, pts, k, order="round_robin", seed=None, batch=256):
+    for shard, chunk in spatial.stream_batches(pts, k, batch, order=order,
+                                               seed=seed):
+        model.partial_fit(shard, chunk)
+        model.service.refresh()
+
+
+def assert_matches_host(svc, spec):
+    live, parts, labels = svc.live()
+    host, _, _ = core_ddc.ddc_host(live, len(parts), spec["eps"],
+                                   spec["min_pts"], partition=parts,
+                                   contour="grid")
+    assert same_clustering(labels, host), "diverged from batch ddc_host"
+
+
+def check_layout(layout: str):
+    spec = spatial.PHASE2_LAYOUTS[layout]
+    pts = spec["make"](N)
+    for k in SHARD_COUNTS:
+        meters = {b: CommMeter() for b in ("stream", "dist")}
+        models = {b: build(layout, k, b, meter=meters[b])
+                  for b in ("stream", "dist")}
+        for b in ("stream", "dist"):
+            stream_in(models[b], pts, k)
+        svc_s = models["stream"].service
+        svc_d = models["dist"].service
+
+        # (1) labels: dist == stream bit-for-bit, both == host clustering
+        assert np.array_equal(models["stream"].labels_,
+                              models["dist"].labels_), "dist != stream labels"
+        assert_matches_host(svc_d, spec)
+
+        # (2) cached pair-d2: dist == stream == from-scratch, bit-for-bit
+        d2 = np.asarray(svc_d.pair_d2)
+        np.testing.assert_array_equal(d2, np.asarray(svc_s.pair_d2),
+                                      err_msg="dist pair_d2 != stream")
+        svc_d.remerge_full()
+        np.testing.assert_array_equal(d2, np.asarray(svc_d.pair_d2),
+                                      err_msg="delta != full rebuild")
+
+        # (3) exact axis-crossing byte accounting
+        b = models["dist"].config.core().buffer_bytes()
+        c = models["dist"].config.max_clusters
+        meters["dist"].reset()
+        models["dist"].partial_fit(0, pts[:8])
+        svc_d.refresh()
+        assert meters["dist"].snapshot()["bytes_total"] == b + k * c * 4
+        meters["dist"].reset()
+        svc_d.remerge_full()
+        assert meters["dist"].snapshot()["bytes_total"] == k * b + k * c * 4
+        models["stream"].partial_fit(0, pts[:8])   # keep engines in lockstep
+        svc_s.refresh()
+        svc_s.remerge_full()
+
+        # (4) routed queries agree label-for-label (ties included)
+        rng = np.random.default_rng(k)
+        q = np.concatenate([pts[rng.integers(0, N, 200)],
+                            rng.uniform(0, 1, (100, 2)).astype(np.float32),
+                            np.array([[5.0, 5.0]], np.float32)])
+        np.testing.assert_array_equal(models["stream"].query(q),
+                                      models["dist"].query(q))
+        assert 0 < svc_d.query_shards_scanned \
+            <= svc_d.query_chunks * k, svc_d.routing_stats()
+
+        # (5) snapshot -> restore is bit-identical
+        import tempfile
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "ckpt")
+            models["dist"].save(path)
+            restored = DDC.load(path)
+            np.testing.assert_array_equal(restored.labels_,
+                                          models["dist"].labels_)
+            np.testing.assert_array_equal(
+                np.asarray(restored.service.pair_d2),
+                np.asarray(svc_d.pair_d2))
+        print(f"PASS {layout} k={k}")
+
+
+def _one_ordering(seed: int, k: int, batch: int, evict_step: int):
+    """Shuffled ingest (+ optional interleaved evictions): dist must
+    bit-match a stream engine fed the identical call sequence — labels
+    AND cached pair-d2 — under ANY ordering.  With no evictions
+    (``evict_step=0``) the tuned-layout streaming≡batch contract also
+    applies, so the result is additionally checked against ``ddc_host``;
+    aggressive mid-stream eviction can legitimately leave borderline
+    inter-fragment gaps where the engine's contour-proximity predicate
+    and the host oracle's grid-distance predicate disagree (the DESIGN
+    §7 tuning covers the full layouts, not arbitrary evicted subsets),
+    so the host comparison is scoped to the non-evicting draws."""
+    layout = "linked_ovals"
+    spec = spatial.PHASE2_LAYOUTS[layout]
+    pts = spec["make"](N)
+    models = {b: build(layout, k, b, max_batch=batch)
+              for b in ("stream", "dist")}
+    batches = spatial.stream_batches(pts, k, batch, order="shuffled",
+                                     seed=seed)
+    rng = np.random.default_rng(seed)
+    victims = rng.integers(0, k, size=len(batches))
+    for b in ("stream", "dist"):
+        svc = models[b].service
+        for i, (shard, chunk) in enumerate(batches):
+            svc.ingest(shard, chunk, t=float(i))
+            if evict_step and i % evict_step == evict_step - 1:
+                # seed-deterministic evictions mid-stream, same
+                # schedule for both engines
+                svc.evict_oldest(int(victims[i]), int(batch // 4))
+            svc.refresh()
+        if evict_step:
+            models[b].expire(t=1.0)       # TTL: drop the first batch
+    assert np.array_equal(models["stream"].labels_,
+                          models["dist"].labels_)
+    np.testing.assert_array_equal(
+        np.asarray(models["stream"].service.pair_d2),
+        np.asarray(models["dist"].service.pair_d2))
+    if not evict_step:
+        assert_matches_host(models["dist"].service, spec)
+
+
+def check_orderings():
+    if HAVE_HYPOTHESIS:
+        @settings(max_examples=4, deadline=None)
+        @given(seed=st.integers(0, 2**31 - 1),
+               k=st.sampled_from((2, 4)),
+               batch=st.sampled_from((128, 256)),
+               evict_step=st.sampled_from((0, 3, 4, 5, 6)))
+        def run(seed, k, batch, evict_step):
+            _one_ordering(seed, k, batch, evict_step)
+
+        run()
+    else:
+        # Fixed fallback examples so the check still bites where the
+        # dev extra is absent.
+        for seed, k, batch, evict_step in ((0, 2, 256, 3), (3, 2, 256, 0),
+                                           (7, 4, 128, 5)):
+            _one_ordering(seed, k, batch, evict_step)
+    print("PASS orderings")
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which == "orderings":
+        check_orderings()
+    else:
+        names = list(spatial.PHASE2_LAYOUTS) if which == "all" else [which]
+        for name in names:
+            check_layout(name)
+    print("ALL_OK")

@@ -48,7 +48,7 @@ def layout_points(layout: str, n: int = N) -> np.ndarray:
 
 class TestConfigValidate:
     def test_all_backends_registered(self):
-        assert set(BACKENDS) == {"host", "jit", "stream"}
+        assert set(BACKENDS) == {"host", "jit", "stream", "dist"}
 
     @pytest.mark.parametrize("kw", [
         dict(eps=-1.0),
