@@ -198,6 +198,52 @@ def check_serve(doc: dict):
                  "delta bound")
 
 
+def check_recovery(doc: dict):
+    _require(doc.get("schema") == "recovery-bench/v1",
+             f"recovery: bad schema tag {doc.get('schema')!r}")
+    smoke = bool(doc.get("smoke", False))
+    rows = _typed(doc, "rows", list, "recovery")
+    _require(len(rows) > 0, "recovery: rows is empty")
+    layouts = _typed(doc, "layouts", dict, "recovery")
+    _require(len(layouts) >= 1, "recovery: no layouts recorded")
+    _require(doc.get("backend") in ("stream", "dist", "mixed"),
+             f"recovery: backend tag {doc.get('backend')!r} not one of "
+             f"stream/dist/mixed")
+    seen = set()
+    for i, row in enumerate(rows):
+        ctx = f"recovery.rows[{i}]"
+        be = _typed(row, "backend", str, ctx)
+        _require(be in ("stream", "dist"),
+                 f"{ctx}: backend {be!r} not 'stream' or 'dist'")
+        layout = _typed(row, "layout", str, ctx)
+        _require(layout in layouts, f"{ctx}: unknown layout {layout!r}")
+        k = _typed(row, "shards", int, ctx)
+        _require(k >= 2, f"{ctx}: shards < 2")
+        for key in ("mttr_ms", "healthy_query_ms", "degraded_query_ms"):
+            _require(_typed(row, key, (int, float), ctx) > 0,
+                     f"{ctx}: {key} <= 0")
+        _require(_typed(row, "recovered_bitexact", bool, ctx) is True,
+                 f"{ctx}: post-recovery state diverged from the "
+                 f"fault-free twin")
+        _require(_typed(row, "journal_entries", int, ctx) > 0,
+                 f"{ctx}: the write-ahead journal recorded nothing")
+        _require(_typed(row, "quarantine_events", int, ctx) >= 1,
+                 f"{ctx}: the kill fault never quarantined a shard")
+        seen.add((layout, be, k))
+    for layout in layouts:
+        ks = {k for (lo, _, k) in seen if lo == layout}
+        _require(len(ks) > 0, f"recovery: no rows for {layout}")
+        if not smoke:
+            _require(max(ks) >= 8,
+                     f"recovery: {layout} never reaches 8 shards")
+    if not smoke:
+        _require(len(layouts) >= 3, "recovery: fewer than 3 layouts "
+                                    "(non-smoke run)")
+    summary = _typed(doc, "summary", dict, "recovery")
+    _require(summary.get("all_recovered_bitexact") is True,
+             "recovery.summary: all_recovered_bitexact is not true")
+
+
 def check_file(path: str):
     with open(path) as f:
         doc = json.load(f)
@@ -207,6 +253,9 @@ def check_file(path: str):
     if doc.get("schema") == "serve-bench/v1":
         check_serve(doc)
         return "serve"
+    if doc.get("schema") == "recovery-bench/v1":
+        check_recovery(doc)
+        return "recovery"
     if "bt" in doc:
         check_phase1(doc)
         return "phase1"

@@ -1,0 +1,202 @@
+"""Fault-tolerance benchmark — MTTR and degraded-mode query latency for
+the serve engines (DESIGN.md §11).
+
+Four spatial layouts (the shared ``PHASE2_LAYOUTS`` table) × shard
+counts {2, 4, 8} × both serve engines (``stream`` host-driven, ``dist``
+device-resident).  Per cell the service ingests the full layout, then a
+seeded ``FaultPlan`` kills shard 0's lane mid-refresh:
+
+* **healthy_query_ms** — steady-state routed query latency before the
+  fault;
+* **degraded_query_ms** — the same query batch while shard 0 is
+  quarantined (healthy shards keep serving; the answer is flagged
+  stale);
+* **mttr_ms** — wall-clock of ``recover(0)`` (journal replay + lane
+  re-upload) plus the refresh that folds the shard back in;
+* **recovered_bitexact** — post-recovery global labels AND the cached
+  pair-d2 matrix must equal a fault-free twin fed the identical ingest
+  schedule, bit-for-bit.  The bench hard-fails otherwise: recovery
+  speed is meaningless if the recovered state is wrong.
+
+Writes ``BENCH_recovery.json`` (schema ``recovery-bench/v1``,
+``benchmarks/check_bench.py``).  ``--smoke`` trims the sweep for CI;
+``--backend`` picks stream/dist/both (dist forces an 8-device CPU
+override before jax initialises).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _parse_args(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny CI subset: 2/4 shards, one layout")
+    p.add_argument("--backend", choices=("stream", "dist", "both"),
+                   default="both", help="which serve engine(s) to bench")
+    p.add_argument("--out", default=None, help="output JSON path")
+    return p.parse_args(argv)
+
+
+_ARGS = None
+if __name__ == "__main__":
+    # The dist engine pins one shard per device; the CPU device count
+    # must be forced before jax initialises (i.e. before the repro
+    # imports below).
+    _ARGS = _parse_args()
+    if _ARGS.backend in ("dist", "both"):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=8").strip()
+
+import numpy as np                                    # noqa: E402
+
+from repro.data import spatial                        # noqa: E402
+from repro.ddc import DDC, DDCConfig                  # noqa: E402
+from repro.serve import FaultEvent, FaultPlan         # noqa: E402
+
+N = 2048
+BATCH = 256
+QUERIES = 256
+LAYOUTS = spatial.PHASE2_LAYOUTS
+
+
+def min_time(fn, reps: int) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, (time.perf_counter() - t0) * 1e3)
+    return best
+
+
+def build(spec: dict, k: int, backend: str, faults=None) -> DDC:
+    cap = spatial.shard_capacity(N, k)
+    cfg = DDCConfig(
+        eps=spec["eps"], min_pts=spec["min_pts"], grid=spec["grid"],
+        max_clusters=spec["max_clusters"], max_verts=spec["max_verts"],
+        backend=backend, shards=k, capacity=cap,
+        max_batch=min(BATCH, cap), max_queries=QUERIES).validate()
+    return DDC(cfg, faults=faults)
+
+
+def bench_cell(name: str, spec: dict, k: int, backend: str,
+               reps: int = 3) -> dict:
+    pts = spec["make"](N)
+    batch = min(BATCH, spatial.shard_capacity(N, k))
+    model = build(spec, k, backend)
+    twin = build(spec, k, backend)
+    for m in (model, twin):
+        for shard, chunk in spatial.stream_batches(pts, k, batch):
+            m.partial_fit(shard, chunk)
+            m.service.refresh()
+    svc = model.service
+
+    rng = np.random.default_rng(0)
+    q = rng.uniform(0, 1, (QUERIES, 2)).astype(np.float32)
+    svc.query(q)   # compile
+    healthy_ms = min_time(lambda: svc.query(q), reps)
+
+    # Kill shard 0's lane on its next delta delivery; the twin sees the
+    # identical ingest but no fault.
+    svc.faults = FaultPlan(events=(FaultEvent("kill", shard=0),))
+    for m in (model, twin):
+        m.partial_fit(0, pts[:8])
+        m.service.refresh()
+    assert 0 in svc.quarantined, "kill fault did not quarantine shard 0"
+    degraded_ms = min_time(lambda: svc.query(q), reps)
+    assert svc.last_query_degraded, "degraded query not flagged stale"
+
+    # MTTR: journal replay + lane re-upload + the refresh that folds the
+    # recovered shard back into the global state.
+    t0 = time.perf_counter()
+    assert svc.recover(0)
+    svc.refresh()
+    mttr_ms = (time.perf_counter() - t0) * 1e3
+
+    bitexact = (
+        np.array_equal(model.labels_, twin.labels_)
+        and np.array_equal(np.asarray(svc.pair_d2),
+                           np.asarray(twin.service.pair_d2)))
+    stats = svc.stats()
+    return {
+        "backend": backend,
+        "layout": name,
+        "shards": k,
+        "n_live": int(svc.n_live()),
+        "healthy_query_ms": round(healthy_ms, 3),
+        "degraded_query_ms": round(degraded_ms, 3),
+        "mttr_ms": round(mttr_ms, 3),
+        "recovered_bitexact": bool(bitexact),
+        "journal_entries": stats["journal_entries"],
+        "quarantine_events": stats["quarantined_shards"],
+        "degraded_queries": stats["degraded_queries"],
+    }
+
+
+def run(smoke: bool = False, out_path: str | None = None,
+        backend: str = "both", print_rows: bool = True):
+    shards = (2, 4) if smoke else (2, 4, 8)
+    backends = ("stream", "dist") if backend == "both" else (backend,)
+    layouts = dict(list(LAYOUTS.items())[:1]) if smoke else LAYOUTS
+    rows = []
+    layouts_meta = {}
+    for name, spec in layouts.items():
+        layouts_meta[name] = {
+            key: spec[key] for key in ("eps", "min_pts", "grid", "max_verts",
+                                       "max_clusters")
+        } | {"n": N}
+        for be in backends:
+            for k in shards:
+                row = bench_cell(name, spec, k, be)
+                rows.append(row)
+                if print_rows:
+                    print(f"recovery_{be}_{name}_k{k}: "
+                          f"mttr={row['mttr_ms']}ms "
+                          f"healthy={row['healthy_query_ms']}ms "
+                          f"degraded={row['degraded_query_ms']}ms "
+                          f"bitexact={row['recovered_bitexact']}")
+
+    all_bitexact = all(r["recovered_bitexact"] for r in rows)
+    summary = {
+        "all_recovered_bitexact": all_bitexact,
+        "n_layouts": len(layouts),
+        "max_shards": max(shards),
+        "mean_mttr_ms": {
+            be: round(float(np.mean(
+                [r["mttr_ms"] for r in rows if r["backend"] == be])), 3)
+            for be in backends},
+    }
+    out = {
+        "schema": "recovery-bench/v1",
+        "smoke": bool(smoke),
+        "backend": "mixed" if backend == "both" else backend,
+        "n": N,
+        "batch": BATCH,
+        "shards": list(shards),
+        "layouts": layouts_meta,
+        "rows": rows,
+        "summary": summary,
+    }
+    if out_path is None:
+        out_path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_recovery.json")
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+    if print_rows:
+        print("summary:", json.dumps(summary))
+        print("wrote", out_path)
+    if not all_bitexact:
+        bad = [(r["backend"], r["layout"], r["shards"]) for r in rows
+               if not r["recovered_bitexact"]]
+        print("RECOVERY BENCH FAILED:", bad, file=sys.stderr)
+        raise SystemExit(1)
+    return rows
+
+
+if __name__ == "__main__":
+    run(smoke=_ARGS.smoke, out_path=_ARGS.out, backend=_ARGS.backend)

@@ -292,12 +292,22 @@ def update_pair_d2(pair_d2: jax.Array, batch: ClusterSet, shard,
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def merge_from_d2(batch: ClusterSet, pair_d2: jax.Array,
-                  cfg: DDCConfig) -> Tuple[ClusterSet, jax.Array]:
+                  cfg: DDCConfig,
+                  exclude: jax.Array | None = None
+                  ) -> Tuple[ClusterSet, jax.Array]:
     """The merge fold given a precomputed slot×slot distance matrix:
     overlap predicate → transitive closure → ranked rebuild.  Everything
     downstream of the matrix is a pure function of (batch, pair_d2), so
     feeding a cached-and-patched matrix (streaming delta path) yields the
-    exact same global clustering as a from-scratch ``merge_many``."""
+    exact same global clustering as a from-scratch ``merge_many``.
+
+    ``exclude`` (optional, (K,) bool) masks whole shards out of the fold
+    without touching the cached matrix — the degraded-merge path for
+    quarantined shards: their slots are treated as invalid (maps row all
+    -1, their sizes and overflow flags ignored), so healthy shards keep
+    merging and the matrix stays pristine for a bit-exact rejoin.
+    ``exclude=None`` traces separately and is the identical healthy
+    path."""
     c, v = cfg.max_clusters, cfg.max_verts
     k = batch.valid.shape[0]
     m = k * c
@@ -305,6 +315,8 @@ def merge_from_d2(batch: ClusterSet, pair_d2: jax.Array,
     counts = batch.counts.reshape(m)
     sizes = batch.sizes.reshape(m)
     valid = batch.valid.reshape(m)
+    if exclude is not None:
+        valid = valid & ~jnp.repeat(exclude, c)
     r = cfg.merge_radius
     overlap = (pair_d2 <= r * r) & valid[:, None] & valid[None, :]
     overlap = overlap | (jnp.eye(m, dtype=bool) & valid[:, None])
@@ -327,7 +339,9 @@ def merge_from_d2(batch: ClusterSet, pair_d2: jax.Array,
     slot_of_old = jnp.where(valid, new_slot_of_root[comp_safe], -1)  # (M,)
 
     n_components = jnp.sum(roots.astype(jnp.int32))
-    overflow = jnp.any(batch.overflow) | (n_components > c)
+    shard_overflow = batch.overflow if exclude is None \
+        else batch.overflow & ~exclude
+    overflow = jnp.any(shard_overflow) | (n_components > c)
 
     # Build merged contours per new slot.
     flat_pts = contours.reshape(m * v, 2)
@@ -357,7 +371,8 @@ def merge_from_d2(batch: ClusterSet, pair_d2: jax.Array,
 
 
 def merge_delta(batch: ClusterSet, pair_d2: jax.Array | None,
-                dirty, cfg: DDCConfig
+                dirty, cfg: DDCConfig,
+                exclude: jax.Array | None = None
                 ) -> Tuple[ClusterSet, jax.Array, jax.Array]:
     """The aggregator side of a delta exchange: fold axis-gathered dirty
     ClusterSets into a cached slot-distance matrix and re-close the merge.
@@ -372,13 +387,18 @@ def merge_delta(batch: ClusterSet, pair_d2: jax.Array | None,
     argument.  Shared by the host-driven streaming engine
     (serve/cluster_service.py) and the device-resident ``dist`` data
     plane (serve/dist_service.py); returns (global, maps, pair_d2).
+
+    ``exclude`` ((K,) bool or None) is the quarantine mask forwarded to
+    ``merge_from_d2``: excluded shards never patch the matrix (they are
+    not in ``dirty``) and are masked out of the fold, but their cached
+    rows stay intact so recovery is one ordinary row patch.
     """
     if pair_d2 is None or dirty is None:
         pair_d2 = contour_pair_d2_exact(batch, cfg)
     else:
         for i in dirty:
             pair_d2 = update_pair_d2(pair_d2, batch, i, cfg)
-    merged, maps = merge_from_d2(batch, pair_d2, cfg)
+    merged, maps = merge_from_d2(batch, pair_d2, cfg, exclude)
     return merged, maps, pair_d2
 
 

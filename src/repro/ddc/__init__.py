@@ -16,12 +16,12 @@ from repro.core.ddc import (
     make_ddc_fn,
     same_clustering,
 )
-from repro.ddc.api import DDC, SNAPSHOT_FORMAT
+from repro.ddc.api import DDC, SNAPSHOT_FORMAT, SnapshotError
 from repro.ddc.backends import BACKENDS, Backend, register_backend
 from repro.ddc.config import ConfigError, DDCConfig
 
 __all__ = [
-    "DDC", "DDCConfig", "ConfigError", "SNAPSHOT_FORMAT",
+    "DDC", "DDCConfig", "ConfigError", "SNAPSHOT_FORMAT", "SnapshotError",
     "BACKENDS", "Backend", "register_backend",
     "ClusterSet", "CommMeter", "ddc_host", "make_ddc_fn",
     "same_clustering",

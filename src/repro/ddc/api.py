@@ -27,24 +27,35 @@ import json
 import os
 import shutil
 import tempfile
+import zipfile
 
 import numpy as np
 
 from repro.core import ddc as core_ddc
 from repro.ddc import backends as backends_mod
 from repro.ddc.config import DDCConfig
+from repro.serve import faults as faults_mod
 
 SNAPSHOT_FORMAT = "repro-ddc/v1"
+
+
+class SnapshotError(RuntimeError):
+    """A snapshot directory that cannot be loaded (truncated npz,
+    corrupt or missing manifest, wrong format tag).  Raised by
+    ``DDC.load`` *before* any model state is constructed, so a failed
+    load never disturbs a live service."""
 
 
 class DDC:
     """Estimator facade over a pluggable DDC execution backend."""
 
     def __init__(self, config: DDCConfig,
-                 meter: core_ddc.CommMeter | None = None):
+                 meter: core_ddc.CommMeter | None = None,
+                 faults: "faults_mod.FaultPlan | None" = None):
         self.config = config.validate()
+        self._faults = faults
         self.backend = backends_mod.BACKENDS[config.backend](
-            self.config, meter=meter)
+            self.config, meter=meter, faults=faults)
 
     # -- write path --------------------------------------------------------
 
@@ -144,25 +155,60 @@ class DDC:
         os.rename(tmp, path)
         if old is not None:
             shutil.rmtree(old, ignore_errors=True)
+        if self._faults is not None and self._faults.take_torn_snapshot():
+            faults_mod.tear_snapshot(path)
         return path
 
     @classmethod
     def load(cls, path: str,
-             meter: core_ddc.CommMeter | None = None) -> "DDC":
+             meter: core_ddc.CommMeter | None = None,
+             faults: "faults_mod.FaultPlan | None" = None) -> "DDC":
         """Rebuild a saved model; the stream backend resumes exactly
         where ``save`` left off (same labels, same cached matrices).
         ``meter`` becomes the restored backend's comm meter — it counts
         traffic from this process on; a snapshot does not replay the
-        saved run's collectives."""
-        with open(os.path.join(path, "manifest.json")) as f:
-            manifest = json.load(f)
-        if manifest.get("format") != SNAPSHOT_FORMAT:
-            raise ValueError(
-                f"{path}: unknown snapshot format {manifest.get('format')!r}")
-        model = cls(DDCConfig.from_manifest(manifest["config"]), meter=meter)
-        with np.load(os.path.join(path, "state.npz")) as z:
-            arrays = {k: z[k] for k in z.files}
-        model.backend.load_state(arrays, manifest["state"])
+        saved run's collectives.
+
+        Every snapshot defect — missing or corrupt ``manifest.json``, a
+        truncated/torn ``state.npz``, a format-tag mismatch, missing
+        manifest keys — raises ``SnapshotError``, and it is raised
+        *before* the model object is built: both files are parsed fully
+        up front, so a failed load cannot leave a half-restored model or
+        touch any live service the caller keeps running."""
+        # Parse-then-construct: read and validate EVERYTHING before
+        # building the model, so failure here is side-effect free.
+        try:
+            with open(os.path.join(path, "manifest.json")) as f:
+                manifest = json.load(f)
+        except (OSError, json.JSONDecodeError, UnicodeDecodeError) as e:
+            raise SnapshotError(f"{path}: unreadable manifest.json: {e}") \
+                from e
+        if not isinstance(manifest, dict) \
+                or manifest.get("format") != SNAPSHOT_FORMAT:
+            fmt = manifest.get("format") if isinstance(manifest, dict) \
+                else type(manifest).__name__
+            raise SnapshotError(
+                f"{path}: unknown snapshot format {fmt!r} "
+                f"(expected {SNAPSHOT_FORMAT!r})")
+        try:
+            config = DDCConfig.from_manifest(manifest["config"])
+            state_manifest = manifest["state"]
+        except (KeyError, TypeError, ValueError) as e:
+            raise SnapshotError(f"{path}: malformed manifest.json: {e}") \
+                from e
+        try:
+            with np.load(os.path.join(path, "state.npz")) as z:
+                arrays = {k: z[k] for k in z.files}
+        except (OSError, ValueError, KeyError, EOFError,
+                zipfile.BadZipFile) as e:
+            raise SnapshotError(
+                f"{path}: truncated or corrupt state.npz: {e}") from e
+        model = cls(config, meter=meter, faults=faults)
+        try:
+            model.backend.load_state(arrays, state_manifest)
+        except (KeyError, TypeError, ValueError) as e:
+            raise SnapshotError(
+                f"{path}: snapshot state does not restore: {e}") from e
         return model
 
     # -- stream-backend introspection --------------------------------------

@@ -72,14 +72,21 @@ def _query_nearest(q: np.ndarray, pts: np.ndarray, labels: np.ndarray,
 
 
 class Backend:
-    """Execution-engine interface the facade drives (see module doc)."""
+    """Execution-engine interface the facade drives (see module doc).
+
+    ``faults`` (an optional ``repro.serve.FaultPlan``) arms the
+    streaming engines' fault-injection seam for reproducible chaos
+    runs; the batch backends accept and ignore it (they have no
+    exchange to fault)."""
 
     name = "?"
 
     def __init__(self, cfg: DDCConfig,
-                 meter: core_ddc.CommMeter | None = None):
+                 meter: core_ddc.CommMeter | None = None,
+                 faults=None):
         self.cfg = cfg
         self.meter = meter or core_ddc.CommMeter()
+        self.faults = faults
 
     # write path
     def fit(self, points: np.ndarray, t: float | None = None) -> None:
@@ -120,8 +127,8 @@ class _BufferedBatchBackend(Backend):
     """Shared machinery for the batch backends: per-shard point buffers,
     lazy refit, block-partition bookkeeping."""
 
-    def __init__(self, cfg: DDCConfig, meter=None):
-        super().__init__(cfg, meter)
+    def __init__(self, cfg: DDCConfig, meter=None, faults=None):
+        super().__init__(cfg, meter, faults=faults)
         self._shard_pts: List[np.ndarray] = [
             np.zeros((0, 2), np.float32) for _ in range(cfg.shards)]
         self._labels: Optional[np.ndarray] = None
@@ -182,8 +189,8 @@ class HostBackend(_BufferedBatchBackend):
     """Paper-faithful NumPy reference: per-partition ``dbscan_ref`` +
     exact polygon-overlap union-find (``ddc_host``, grid contours)."""
 
-    def __init__(self, cfg: DDCConfig, meter=None):
-        super().__init__(cfg, meter)
+    def __init__(self, cfg: DDCConfig, meter=None, faults=None):
+        super().__init__(cfg, meter, faults=faults)
         self._exchanged = 0
 
     def _refit(self) -> np.ndarray:
@@ -226,8 +233,8 @@ class JitBackend(_BufferedBatchBackend):
     mask keeps padded rows out of phase 1.
     """
 
-    def __init__(self, cfg: DDCConfig, meter=None):
-        super().__init__(cfg, meter)
+    def __init__(self, cfg: DDCConfig, meter=None, faults=None):
+        super().__init__(cfg, meter, faults=faults)
         self._runners: dict = {}
 
     def make_runner(self, n_points: int):
@@ -290,8 +297,8 @@ class StreamBackend(Backend):
     bit-identical snapshot/restore.  ``fit`` streams the batch in;
     ``partial_fit`` is the native write path."""
 
-    def __init__(self, cfg: DDCConfig, meter=None):
-        super().__init__(cfg, meter)
+    def __init__(self, cfg: DDCConfig, meter=None, faults=None):
+        super().__init__(cfg, meter, faults=faults)
         self._svc = None
 
     @classmethod
@@ -320,11 +327,15 @@ class StreamBackend(Backend):
             shards=self.cfg.shards, capacity=capacity,
             max_batch=min(self.cfg.max_batch, capacity),
             max_queries=self.cfg.max_queries,
-            merge_mode=self.cfg.merge_mode, ddc=self.cfg.core())
+            merge_mode=self.cfg.merge_mode,
+            max_retries=self.cfg.max_retries,
+            retry_backoff=self.cfg.retry_backoff,
+            journal_limit=self.cfg.journal_limit,
+            ddc=self.cfg.core())
 
     def _build(self, capacity: int):
         return self._svc_cls()(self._stream_config(capacity),
-                               meter=self.meter)
+                               meter=self.meter, faults=self.faults)
 
     def fit(self, points: np.ndarray, t: float | None = None) -> None:
         from repro.data import spatial
@@ -377,9 +388,15 @@ class StreamBackend(Backend):
             max_batch=int(manifest["max_batch"]),
             max_queries=int(manifest["max_queries"]),
             merge_mode=manifest["merge_mode"],
+            max_retries=int(manifest.get("max_retries",
+                                         self.cfg.max_retries)),
+            retry_backoff=float(manifest.get("retry_backoff",
+                                             self.cfg.retry_backoff)),
+            journal_limit=int(manifest.get("journal_limit",
+                                           self.cfg.journal_limit)),
             ddc=self.cfg.core())
         self._svc = self._svc_cls().from_state(
-            scfg, arrays, manifest, meter=self.meter)
+            scfg, arrays, manifest, meter=self.meter, faults=self.faults)
 
 
 @register_backend("dist")

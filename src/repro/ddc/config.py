@@ -62,6 +62,9 @@ class DDCConfig:
     max_batch: int = 256
     max_queries: int = 256
     merge_mode: str = "delta"
+    max_retries: int = 2             # delta re-deliveries per refresh
+    retry_backoff: float = 0.0       # seconds; doubles per retry round
+    journal_limit: int = 1024        # per-shard WAL entries before compaction
 
     _CORE_FIELDS = ("eps", "min_pts", "bounds", "grid", "max_clusters",
                     "max_verts", "merge_eps", "local_algo", "kmeans_k",
@@ -173,6 +176,15 @@ class DDCConfig:
             raise ConfigError(
                 f"capacity {self.capacity} < max_batch {self.max_batch}: an "
                 f"append chunk could overwrite itself in the ring scatter")
+        if self.max_retries < 0:
+            raise ConfigError(
+                f"max_retries must be >= 0, got {self.max_retries}")
+        if self.retry_backoff < 0:
+            raise ConfigError(
+                f"retry_backoff must be >= 0, got {self.retry_backoff}")
+        if self.journal_limit < 1:
+            raise ConfigError(
+                f"journal_limit must be >= 1, got {self.journal_limit}")
 
     def _check_sizing(self, sample: np.ndarray) -> None:
         labels = dbscan_mod.dbscan_ref(sample, self.eps, self.min_pts)

@@ -73,6 +73,11 @@ def main(argv=None):
     ap.add_argument("--n", type=int, default=2048)
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="arm a seeded FaultPlan.random against the serve "
+                         "engine (chaos drill; DESIGN.md §11)")
+    ap.add_argument("--faults", type=int, default=3,
+                    help="number of injected fault events (--fault-seed)")
     args = ap.parse_args(argv)
     if args.mode == "ddc":
         return serve_ddc(args)
@@ -84,6 +89,7 @@ def main(argv=None):
 def serve_ddc(args):
     from repro.data import spatial
     from repro.ddc import DDC, CommMeter, DDCConfig
+    from repro.serve import faults as faults_mod
 
     spec = spatial.PHASE2_LAYOUTS[args.layout]
     pts = spec["make"](args.n)
@@ -95,7 +101,11 @@ def serve_ddc(args):
         max_batch=min(args.batch, cap), max_queries=args.queries,
     ).validate()
     meter = CommMeter()
-    model = DDC(cfg, meter=meter)
+    plan = None
+    if args.fault_seed is not None:
+        plan = faults_mod.FaultPlan.random(
+            seed=args.fault_seed, shards=args.shards, n_faults=args.faults)
+    model = DDC(cfg, meter=meter, faults=plan)
 
     t0 = time.time()
     n_batches = 0
@@ -106,6 +116,13 @@ def serve_ddc(args):
         n_batches += 1
     ingest_s = time.time() - t0
 
+    recovered = []
+    if plan is not None:
+        # Chaos drill epilogue: rejoin every quarantined shard and fold
+        # the replayed state back in before measuring queries.
+        recovered = model.service.recover_all()
+        model.service.refresh()
+
     rng = np.random.default_rng(args.seed)
     q = rng.uniform(0, 1, (args.queries, 2)).astype(np.float32)
     model.query(q[:1])         # compile
@@ -113,6 +130,7 @@ def serve_ddc(args):
     labels = model.query(q)
     query_s = time.time() - t0
 
+    stats = model.service.stats()
     out = model.comm_stats() | {
         "mode": "ddc",
         "layout": args.layout,
@@ -120,7 +138,17 @@ def serve_ddc(args):
         "ingest_ms_per_batch": round(ingest_s / max(n_batches, 1) * 1e3, 2),
         "query_ms": round(query_s * 1e3, 2),
         "query_clustered_frac": round(float(np.mean(labels >= 0)), 3),
+        "refreshes": stats["refreshes"],
+        "retries": stats["retries"],
+        "quarantined_shards": stats["quarantined_shards"],
+        "quarantined_now": stats["quarantined_now"],
+        "fenced_deltas": stats["fenced_deltas"],
+        "degraded_queries": stats["degraded_queries"],
+        "journal_entries": stats["journal_entries"],
     }
+    if args.fault_seed is not None:
+        out["fault_seed"] = args.fault_seed
+        out["recovered_shards"] = recovered
     print(json.dumps(out))
     return out
 

@@ -1,7 +1,9 @@
 """Serving substrates: the LM prefill/decode engine (engine.py) and the
 streaming DDC cluster services (cluster_service.py: host-mirror control
 plane + host-driven data plane; dist_service.py: the same control plane
-over a device-resident shard_map data plane).
+over a device-resident shard_map data plane).  faults.py / journal.py
+are the failure model riding both (DESIGN.md §11): seeded fault
+injection, the delta validation gate, and the write-ahead recovery log.
 
 The cluster-service re-exports are lazy (PEP 562) so importing the LM
 engine does not drag in the whole clustering stack, and vice versa.
@@ -9,6 +11,10 @@ engine does not drag in the whole clustering stack, and vice versa.
 
 _CLUSTER_EXPORTS = ("ClusterService", "ShardControlPlane", "StreamConfig")
 _DIST_EXPORTS = ("DistClusterService",)
+_FAULT_EXPORTS = ("FAULT_KINDS", "FaultEvent", "FaultPlan", "FaultError",
+                  "DeltaDropped", "LaneKilled", "DeltaValidationError",
+                  "RecoveryError")
+_JOURNAL_EXPORTS = ("Journal",)
 
 
 def __getattr__(name):
@@ -18,4 +24,10 @@ def __getattr__(name):
     if name in _DIST_EXPORTS:
         from repro.serve import dist_service
         return getattr(dist_service, name)
+    if name in _FAULT_EXPORTS:
+        from repro.serve import faults
+        return getattr(faults, name)
+    if name in _JOURNAL_EXPORTS:
+        from repro.serve import journal
+        return getattr(journal, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -75,6 +75,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import List, Optional, Tuple
 
 import jax
@@ -82,6 +83,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ddc
+from repro.serve import faults as faults_mod
+from repro.serve import journal as journal_mod
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +96,9 @@ class StreamConfig:
     max_batch: int = 256            # static ingest width (host pads)
     max_queries: int = 256          # static query width (host pads)
     merge_mode: str = "delta"       # "delta" | "full"
+    max_retries: int = 2            # delta re-deliveries per refresh
+    retry_backoff: float = 0.0      # seconds; doubles per retry round
+    journal_limit: int = 1024       # per-shard WAL entries before compaction
     ddc: ddc.DDCConfig = dataclasses.field(default_factory=ddc.DDCConfig)
 
 
@@ -163,6 +169,31 @@ def _query_labels(q, qn, pts, mask, glabels, eps):
     return jnp.where(jnp.arange(q.shape[0]) < qn, lab, -1)
 
 
+def _cs_to_host(cs: ddc.ClusterSet) -> dict:
+    """One shard's delta as the host-side wire payload the validation
+    gate (and the fault seam) sees: plain numpy views of the leaves."""
+    return {
+        "contours": np.asarray(cs.contours),
+        "counts": np.asarray(cs.counts),
+        "sizes": np.asarray(cs.sizes),
+        "valid": np.asarray(cs.valid),
+        "overflow": np.asarray(cs.overflow),
+    }
+
+
+def _cs_from_host(payload: dict) -> ddc.ClusterSet:
+    """Rebuild the device ClusterSet from the wire payload.  The
+    host round-trip is bit-exact (no dtype changes), so staging the
+    gated payload — not the pre-seam device value — costs nothing."""
+    return ddc.ClusterSet(
+        contours=jnp.asarray(payload["contours"], jnp.float32),
+        counts=jnp.asarray(payload["counts"], jnp.int32),
+        sizes=jnp.asarray(payload["sizes"], jnp.int32),
+        valid=jnp.asarray(payload["valid"], bool),
+        overflow=jnp.asarray(payload["overflow"], bool),
+    )
+
+
 # ---------------------------------------------------------------------------
 # Control plane — the host-mirror half every data plane shares
 # ---------------------------------------------------------------------------
@@ -179,7 +210,8 @@ class ShardControlPlane:
     never syncs with the device.
     """
 
-    def __init__(self, scfg: StreamConfig, meter: ddc.CommMeter | None = None):
+    def __init__(self, scfg: StreamConfig, meter: ddc.CommMeter | None = None,
+                 faults: faults_mod.FaultPlan | None = None):
         if scfg.merge_mode not in ("delta", "full"):
             raise ValueError(scfg.merge_mode)
         if scfg.capacity < scfg.max_batch:
@@ -189,6 +221,7 @@ class ShardControlPlane:
         self.scfg = scfg
         self.cfg = scfg.ddc
         self.meter = meter
+        self.faults = faults
         k, cap = scfg.shards, scfg.capacity
         # Host mirrors of the ring state (known exactly from the call
         # sequence — no device sync on the write path).  ``_live`` is the
@@ -223,6 +256,21 @@ class ShardControlPlane:
         self.delta_refreshes = 0
         self.query_chunks = 0
         self.query_shards_scanned = 0
+        # Failure model (DESIGN.md §11): a bounded write-ahead journal of
+        # every ingest/evict decision (riding the host mirrors), a
+        # quarantine set of shards whose deltas failed the validation
+        # gate or whose lane died, and per-shard epochs fencing duplicate
+        # deliveries so the merge is exactly-once.
+        self._journal = journal_mod.Journal(k, cap, limit=scfg.journal_limit)
+        self._quarantined: dict = {}    # shard -> reason
+        self._epoch = [0] * k           # delta generation per shard
+        self._merged_epoch = [-1] * k   # last epoch folded into the merge
+        self.retries = 0                # delta re-deliveries (monotonic)
+        self.quarantine_events = 0      # shards ever quarantined (monotonic)
+        self.fenced_deltas = 0          # duplicates the epoch fence dropped
+        self.degraded_queries = 0       # queries routed around quarantine
+        self.last_query_degraded = False
+        self._route_degraded = False
 
     # -- data-plane hooks ---------------------------------------------------
 
@@ -232,6 +280,20 @@ class ShardControlPlane:
 
     def _kill_device(self, shard: int, kill: np.ndarray) -> None:
         raise NotImplementedError
+
+    def _restore_lane(self, shard: int, pts: np.ndarray,
+                      live: np.ndarray) -> None:
+        """Overwrite one shard's device buffers wholesale (the recovery
+        upload: journal-replayed points + live mask)."""
+        raise NotImplementedError
+
+    def _lose_lane(self, shard: int) -> None:
+        """Model a dead lane: its device buffers are gone (zeroed), only
+        the host mirrors + journal survive."""
+        cap = self.scfg.capacity
+        self._restore_lane(shard, np.zeros((cap, 2), np.float32),
+                           np.zeros((cap,), bool))
+        self._invalidate_reads()
 
     def _invalidate_reads(self) -> None:
         """Called whenever a write/evict changes the live point set."""
@@ -271,17 +333,27 @@ class ShardControlPlane:
             if nb < bmax:
                 chunk = np.pad(chunk, ((0, bmax - nb), (0, 0)))
                 pad_idx = np.pad(idx, (0, bmax - nb))
-            self._append_chunk(shard, chunk, pad_idx, nb)
+            seqs = np.arange(self._next_seq + off, self._next_seq + off + nb)
+            # Write-ahead: journal the decision before the device write,
+            # so a lane lost mid-append is still recoverable.
+            self._journal.record_ingest(shard, idx, chunk[:nb],
+                                        ts[off:off + nb], seqs)
+            if shard not in self._quarantined:
+                self._append_chunk(shard, chunk, pad_idx, nb)
             self._live[shard][idx] = True
             self._hpts[shard][idx] = chunk[:nb]
             self._ts[shard][idx] = ts[off:off + nb]
-            self._seq[shard][idx] = np.arange(
-                self._next_seq + off, self._next_seq + off + nb)
+            self._seq[shard][idx] = seqs
             self._head[shard] = int(idx[-1] + 1) % cap
             self._count[shard] = int(self._live[shard].sum())
+        if self._journal.needs_compaction(shard):
+            self._journal.compact(shard, self._hpts[shard],
+                                  self._live[shard], self._ts[shard],
+                                  self._seq[shard])
         self._next_seq += n
-        if n:
+        if n and shard not in self._quarantined:
             self._dirty.add(shard)
+        if n:
             self._bbox[shard] = None
             self._invalidate_reads()
 
@@ -312,10 +384,16 @@ class ShardControlPlane:
         n = int(kill.sum())
         if n == 0:
             return 0
-        self._kill_device(shard, kill)
+        self._journal.record_kill(shard, kill)
+        if shard not in self._quarantined:
+            self._kill_device(shard, kill)
+            self._dirty.add(shard)
         self._live[shard][kill] = False
         self._count[shard] = int(self._live[shard].sum())
-        self._dirty.add(shard)
+        if self._journal.needs_compaction(shard):
+            self._journal.compact(shard, self._hpts[shard],
+                                  self._live[shard], self._ts[shard],
+                                  self._seq[shard])
         self._bbox[shard] = None
         self._invalidate_reads()
         return n
@@ -385,6 +463,17 @@ class ShardControlPlane:
             dx = np.maximum(np.maximum(x0 - q64[:, 0], 0.0), q64[:, 0] - x1)
             dy = np.maximum(np.maximum(y0 - q64[:, 1], 0.0), q64[:, 1] - y1)
             scan[s] = bool(np.any(dx * dx + dy * dy <= eps * eps))
+        # Quarantined shards are routed around: the answer is degraded
+        # (their points can't label a query until recovery), flagged via
+        # ``_route_degraded`` — but healthy shards keep serving.  The
+        # bbox test above ran on the *logical* mirrors, so the flag is
+        # raised exactly when a quarantined shard could have mattered.
+        self._route_degraded = False
+        if self._quarantined:
+            qmask = np.zeros((k,), bool)
+            qmask[list(self._quarantined)] = True
+            self._route_degraded = bool((scan & qmask).any())
+            scan &= ~qmask
         self.query_chunks += 1
         self.query_shards_scanned += int(scan.sum())
         return scan
@@ -405,9 +494,10 @@ class ShardControlPlane:
         cfg = self.cfg
         k, c = self.scfg.shards, cfg.max_clusters
         bbytes = cfg.buffer_bytes()
+        exclude = self._exclude_mask()
         if mode == "delta" and self._pair_d2 is not None:
             self._global, self._maps, self._pair_d2 = ddc.merge_delta(
-                self._batch, self._pair_d2, dirty, cfg)
+                self._batch, self._pair_d2, dirty, cfg, exclude)
             if self.meter is not None:
                 if up_bytes is None:
                     self.meter.add_collective(len(dirty), bbytes)
@@ -420,7 +510,7 @@ class ShardControlPlane:
             # bit-compatible with the delta patches on every backend —
             # see ddc.contour_pair_d2_exact.
             self._global, self._maps, self._pair_d2 = ddc.merge_delta(
-                self._batch, None, None, cfg)
+                self._batch, None, None, cfg, exclude)
             if self.meter is not None:
                 self.meter.add_collective(
                     *((k, bbytes) if up_bytes is None else (1, up_bytes)))
@@ -437,6 +527,157 @@ class ShardControlPlane:
                     self.scfg.shards, self.cfg.max_clusters * 4)
             else:
                 self.meter.add_collective(1, nbytes)
+
+    # -- delta exchange: fault seam, validation gate, retries, fencing ------
+
+    def _exclude_mask(self):
+        """(K,) bool quarantine mask for ``merge_delta``/``merge_from_d2``
+        (None when every shard is healthy — the identical fast path)."""
+        if not self._quarantined:
+            return None
+        mask = np.zeros((self.scfg.shards,), bool)
+        mask[list(self._quarantined)] = True
+        return jnp.asarray(mask)
+
+    def _quarantine(self, shard: int, reason: str) -> None:
+        """Fence ``shard`` out of merges and query routing.  Its cached
+        pair-d2 rows and aggregator mirror stay untouched, so rejoining
+        is one ordinary delta patch — that is the bit-exact-recovery
+        guarantee."""
+        if shard not in self._quarantined:
+            self._quarantined[shard] = reason
+            self.quarantine_events += 1
+        self._dirty.discard(shard)
+        self._invalidate_reads()
+
+    @property
+    def quarantined(self) -> dict:
+        """shard -> reason for every currently quarantined shard."""
+        return dict(self._quarantined)
+
+    def _fault_delta(self, shard: int, attempt: int,
+                     payload: dict) -> Tuple[dict, bool]:
+        """The fault-injection seam on the delta-exchange path.  Consults
+        the plan once per delivery attempt; returns the (possibly
+        mangled) payload plus a duplicate-delivery flag, or raises
+        ``DeltaDropped`` / ``LaneKilled``."""
+        if self.faults is None:
+            return payload, False
+        ev = self.faults.on_delta(shard, attempt)
+        if ev is None:
+            return payload, False
+        if ev.kind in ("drop", "delay"):
+            raise faults_mod.DeltaDropped(
+                f"shard {shard} delta lost (attempt {attempt})")
+        if ev.kind == "kill":
+            raise faults_mod.LaneKilled(f"shard {shard} lane died")
+        if ev.kind == "dup":
+            return payload, True
+        return self.faults.mangle(ev.kind, payload), False
+
+    def _gate_and_stage(self, shard: int, payload: dict, epoch: int,
+                        cs=None) -> bool:
+        """Epoch fence + validation gate in front of the aggregator
+        mirror.  A duplicate (epoch already merged) is discarded —
+        exactly-once; a corrupt payload raises ``DeltaValidationError``
+        BEFORE any mirror or cached pair-d2 state is touched.  ``cs`` is
+        the producer's canonical device ClusterSet for this payload, if
+        it still has one (dropped when the wire copy was mangled); it
+        preserves object identity for the cached empty-shard ClusterSet.
+        Returns True iff the delta was staged."""
+        if epoch <= self._merged_epoch[shard]:
+            self.fenced_deltas += 1
+            return False
+        faults_mod.validate_delta(payload, self.cfg)
+        if cs is None:
+            cs = _cs_from_host(payload)
+        self._local[shard] = cs
+        self._batch = _set_row(self._batch, cs, shard)
+        self._merged_epoch[shard] = epoch
+        return True
+
+    def _exchange_deltas(self, dirty: list, produce) -> list:
+        """Drive one refresh's delta exchange: per-shard delivery with
+        retry/backoff (``max_retries``/``retry_backoff``), the fault
+        seam, the validation gate, and epoch fencing.  ``produce(shard,
+        attempt)`` yields ``(payload, cs)`` — the shard's host-side wire
+        payload plus its canonical device ClusterSet when the producer
+        has one (re-invoked on retry: the lane re-sends).  Shards whose
+        deltas cannot be delivered or fail the gate are quarantined; the
+        rest are staged into the aggregator mirror.  Returns the staged
+        shard list."""
+        staged: list = []
+        pending = list(dirty)
+        for i in pending:
+            self._epoch[i] += 1      # one delta generation per refresh
+        attempt = 0
+        while pending:
+            if attempt > 0:
+                self.retries += len(pending)
+                if self.scfg.retry_backoff > 0:
+                    time.sleep(self.scfg.retry_backoff * 2 ** (attempt - 1))
+            still: list = []
+            for i in pending:
+                epoch = self._epoch[i]
+                try:
+                    sent, cs = produce(i, attempt)
+                    payload, dup = self._fault_delta(i, attempt, sent)
+                    if payload is not sent:
+                        cs = None    # mangled in flight: trust the wire
+                    if self._gate_and_stage(i, payload, epoch, cs):
+                        staged.append(i)
+                    if dup:
+                        # late duplicate of the delta just merged: the
+                        # fence must discard it (exactly-once)
+                        self._gate_and_stage(i, payload, epoch, cs)
+                except faults_mod.DeltaDropped:
+                    still.append(i)
+                except faults_mod.LaneKilled:
+                    self._lose_lane(i)
+                    self._quarantine(i, "lane killed mid-refresh")
+                except faults_mod.DeltaValidationError as e:
+                    self._quarantine(i, f"delta rejected: {e}")
+            if still and attempt >= self.scfg.max_retries:
+                for i in still:
+                    self._quarantine(
+                        i, f"delta dropped ({attempt + 1} attempts)")
+                break
+            pending = still
+            attempt += 1
+        return staged
+
+    # -- recovery ------------------------------------------------------------
+
+    def recover(self, shard: int) -> bool:
+        """Rejoin a quarantined shard: replay the write-ahead journal
+        into the ring-buffer state the lane should hold, upload it, and
+        mark the shard dirty so the next refresh re-runs phase 1 and
+        patches its pair-d2 rows.  Post-recovery state is bit-exact vs
+        an uninterrupted run (DESIGN.md §11).  Returns True if the shard
+        was quarantined (and is now rejoined)."""
+        self._check_shard(shard)
+        if shard not in self._quarantined:
+            return False
+        pts, live, ts, seq = self._journal.replay(shard)
+        # The journal rides the host mirrors: replay must land exactly
+        # on them, or the log itself is damaged.
+        if not (np.array_equal(pts, self._hpts[shard])
+                and np.array_equal(live, self._live[shard])
+                and np.array_equal(ts, self._ts[shard])
+                and np.array_equal(seq, self._seq[shard])):
+            raise faults_mod.RecoveryError(
+                f"journal replay for shard {shard} diverged from the "
+                f"host mirrors; refusing to rejoin")
+        self._restore_lane(shard, pts, live)
+        del self._quarantined[shard]
+        self._dirty.add(shard)
+        self._bbox[shard] = None
+        self._invalidate_reads()
+        return True
+
+    def recover_all(self) -> list:
+        """Rejoin every quarantined shard; returns the recovered list."""
+        return [s for s in sorted(self._quarantined) if self.recover(s)]
 
     def refresh(self, mode: str | None = None, force: bool = False):
         raise NotImplementedError
@@ -456,6 +697,11 @@ class ShardControlPlane:
             "live": np.stack(self._live),
             "ts": np.stack(self._ts),
             "seq": np.stack(self._seq),
+            # The authoritative host point mirror.  Healthy lanes hold
+            # the same bits on device, but a quarantined lane's device
+            # buffer is zeroed — the mirror (not "pts") is what journal
+            # replay must land on, so it is serialised in its own right.
+            "hpts": np.stack(self._hpts),
             "batch_contours": np.asarray(self._batch.contours),
             "batch_counts": np.asarray(self._batch.counts),
             "batch_sizes": np.asarray(self._batch.sizes),
@@ -482,6 +728,18 @@ class ShardControlPlane:
             "query_chunks": self.query_chunks,
             "query_shards_scanned": self.query_shards_scanned,
             "has_global": self._global is not None,
+            "max_retries": self.scfg.max_retries,
+            "retry_backoff": self.scfg.retry_backoff,
+            "journal_limit": self.scfg.journal_limit,
+            "epoch": list(self._epoch),
+            "merged_epoch": list(self._merged_epoch),
+            "quarantined": [[s, r] for s, r in
+                            sorted(self._quarantined.items())],
+            "retries": self.retries,
+            "quarantine_events": self.quarantine_events,
+            "fenced_deltas": self.fenced_deltas,
+            "degraded_queries": self.degraded_queries,
+            "journal_entries": self._journal.entries_total,
         }
 
     def _restore_mirrors(self, arrays: dict, manifest: dict) -> None:
@@ -491,7 +749,8 @@ class ShardControlPlane:
         self._live = [np.asarray(arrays["live"][i], bool) for i in range(k)]
         self._ts = [np.asarray(arrays["ts"][i], np.float64) for i in range(k)]
         self._seq = [np.asarray(arrays["seq"][i], np.int64) for i in range(k)]
-        self._hpts = [np.asarray(arrays["pts"][i], np.float32).copy()
+        hpts = arrays.get("hpts", arrays["pts"])   # pre-§11 fallback
+        self._hpts = [np.asarray(hpts[i], np.float32).copy()
                       for i in range(k)]
         self._bbox = [None] * k
         self._head = [int(h) for h in manifest["head"]]
@@ -503,6 +762,24 @@ class ShardControlPlane:
         self.query_chunks = int(manifest.get("query_chunks", 0))
         self.query_shards_scanned = int(
             manifest.get("query_shards_scanned", 0))
+        # Failure-model mirrors (absent in pre-§11 snapshots -> healthy
+        # defaults).  The journal is not serialised: its base is re-set
+        # to the restored mirrors, so a restored service can still
+        # quarantine-and-recover from this point on.
+        self._epoch = [int(e) for e in manifest.get("epoch", [0] * k)]
+        self._merged_epoch = [int(e) for e in
+                              manifest.get("merged_epoch", [-1] * k)]
+        self._quarantined = {int(s): str(r)
+                             for s, r in manifest.get("quarantined", [])}
+        self.retries = int(manifest.get("retries", 0))
+        self.quarantine_events = int(manifest.get("quarantine_events", 0))
+        self.fenced_deltas = int(manifest.get("fenced_deltas", 0))
+        self.degraded_queries = int(manifest.get("degraded_queries", 0))
+        self._journal.entries_total = int(manifest.get("journal_entries", 0))
+        for s in range(k):
+            self._journal.compact(s, self._hpts[s], self._live[s],
+                                  self._ts[s], self._seq[s])
+        self._journal.compactions = 0
 
     def _restore_batch(self, arrays: dict) -> None:
         """Rebuild the aggregator ClusterSet mirror (and the per-shard
@@ -582,6 +859,15 @@ class ShardControlPlane:
             "delta_refreshes": self.delta_refreshes,
             "n_clusters": int(np.asarray(self._global.valid).sum())
             if self._global is not None else 0,
+            # Failure-model counters (monotonic) + the current
+            # quarantine set, so degraded operation is observable
+            # without log scraping.
+            "retries": self.retries,
+            "quarantined_shards": self.quarantine_events,
+            "quarantined_now": sorted(self._quarantined),
+            "fenced_deltas": self.fenced_deltas,
+            "degraded_queries": self.degraded_queries,
+            "journal_entries": self._journal.entries_total,
         } | self.routing_stats()
         if self.meter is not None:
             out["comm"] = self.meter.snapshot()
@@ -606,8 +892,9 @@ class ClusterService(ShardControlPlane):
     (StreamConfig) and is reused for the lifetime of the service.
     """
 
-    def __init__(self, scfg: StreamConfig, meter: ddc.CommMeter | None = None):
-        super().__init__(scfg, meter)
+    def __init__(self, scfg: StreamConfig, meter: ddc.CommMeter | None = None,
+                 faults: faults_mod.FaultPlan | None = None):
+        super().__init__(scfg, meter, faults=faults)
         k, cap = scfg.shards, scfg.capacity
         self._pts: List[jax.Array] = [
             jnp.zeros((cap, 2), jnp.float32) for _ in range(k)]
@@ -626,6 +913,10 @@ class ClusterService(ShardControlPlane):
     def _kill_device(self, shard, kill) -> None:
         self._mask[shard] = _kill_mask(self._mask[shard], jnp.asarray(kill))
 
+    def _restore_lane(self, shard, pts, live) -> None:
+        self._pts[shard] = jnp.asarray(pts, jnp.float32)
+        self._mask[shard] = jnp.asarray(live, bool)
+
     def _invalidate_reads(self) -> None:
         self._stack_cache.clear()
 
@@ -640,11 +931,11 @@ class ClusterService(ShardControlPlane):
         """
         mode = mode or self.scfg.merge_mode
         cfg = self.cfg
-        dirty = sorted(self._dirty)
+        dirty = sorted(self._dirty - self._quarantined.keys())
         if not dirty and self._global is not None and not force:
             return self._global
 
-        for i in dirty:
+        def produce(i, attempt):
             if self._count[i] == 0:
                 # Emptied shard: the cached all-invalid ClusterSet, no
                 # phase-1 work (extends the PR 2 empty-shard fix).
@@ -652,21 +943,21 @@ class ClusterService(ShardControlPlane):
                 dense = jnp.full((self.scfg.capacity,), -1, jnp.int32)
             else:
                 dense, cs = ddc.local_phase(self._pts[i], self._mask[i], cfg)
-            self._local[i] = cs
-            self._batch = _set_row(self._batch, cs, i)
             self._dense = _set_row(self._dense, dense, i)
+            return _cs_to_host(cs), cs
 
-        self._merge_and_meter(dirty, mode)
+        staged = self._exchange_deltas(dirty, produce)
+        self._merge_and_meter(staged, mode)
         self._meter_maps_down()
         self._glabels = _global_labels(
             self._dense, jnp.stack(self._mask), self._maps)
-        self._dirty.clear()
+        self._dirty -= set(staged)
         self.refreshes += 1
         return self._global
 
     # -- read path ---------------------------------------------------------
 
-    def query(self, points: np.ndarray) -> np.ndarray:
+    def query(self, points: np.ndarray, return_stale: bool = False):
         """Global cluster id for each query point: the label of the
         nearest clustered live point within ``eps`` (DBSCAN's border
         rule against the frozen clustering), else -1.
@@ -677,18 +968,29 @@ class ClusterService(ShardControlPlane):
         no live points and no global state yet (fresh, or fully evicted
         before any refresh) short-circuits to all-noise without compiling
         or running the merge pipeline.
+
+        Quarantined shards are routed around, so healthy shards keep
+        answering during a fault; when a quarantined shard could have
+        mattered for this call, the answer is *stale* — surfaced via
+        ``return_stale=True`` (returns ``(labels, stale)``), the
+        ``last_query_degraded`` flag, and the ``degraded_queries``
+        counter.
         """
         q = np.asarray(points, np.float32).reshape(-1, 2)
+        self.last_query_degraded = False
         if self._global is None and self.n_live() == 0:
-            return np.full((len(q),), -1, np.int32)
+            out = np.full((len(q),), -1, np.int32)
+            return (out, False) if return_stale else out
         if self._dirty or self._global is None:
             self.refresh()
         qmax = self.scfg.max_queries
+        degraded = False
         out = np.empty((len(q),), np.int32)
         for off in range(0, len(q), qmax):
             chunk = q[off:off + qmax]
             nq = len(chunk)
             scan = self._route(chunk)
+            degraded |= self._route_degraded
             sel = np.nonzero(scan)[0]
             if len(sel) == 0:
                 out[off:off + nq] = -1
@@ -700,7 +1002,10 @@ class ClusterService(ShardControlPlane):
             lab = _query_labels(jnp.asarray(chunk), nq, pts, mask, glab,
                                 self.cfg.eps)
             out[off:off + nq] = np.asarray(lab)[:nq]
-        return out
+        self.last_query_degraded = degraded
+        if degraded:
+            self.degraded_queries += 1
+        return (out, degraded) if return_stale else out
 
     def _scan_stack(self, sel: np.ndarray):
         """Stack the scanned shards' buffers, padded to a power-of-two
@@ -753,12 +1058,14 @@ class ClusterService(ShardControlPlane):
 
     @classmethod
     def from_state(cls, scfg: StreamConfig, arrays: dict, manifest: dict,
-                   meter: ddc.CommMeter | None = None) -> "ClusterService":
+                   meter: ddc.CommMeter | None = None,
+                   faults: faults_mod.FaultPlan | None = None
+                   ) -> "ClusterService":
         """Rebuild a service from ``state_dict`` output.  The restored
         engine resumes bit-identically: same labels, same cached pair-d2
         matrix, same delta/full behaviour on the next refresh — no
         re-cluster of the live points."""
-        svc = cls(scfg, meter=meter)
+        svc = cls(scfg, meter=meter, faults=faults)
         k = scfg.shards
         svc._pts = [jnp.asarray(arrays["pts"][i], jnp.float32)
                     for i in range(k)]
@@ -769,7 +1076,7 @@ class ClusterService(ShardControlPlane):
         if manifest.get("has_global") and "pair_d2" in arrays:
             svc._pair_d2 = jnp.asarray(arrays["pair_d2"], jnp.float32)
             svc._global, svc._maps = ddc.merge_from_d2(
-                svc._batch, svc._pair_d2, svc.cfg)
+                svc._batch, svc._pair_d2, svc.cfg, svc._exclude_mask())
             svc._glabels = _global_labels(
                 svc._dense, jnp.stack(svc._mask), svc._maps)
         return svc

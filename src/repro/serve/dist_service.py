@@ -54,8 +54,9 @@ from repro import compat
 from repro.core import ddc
 from repro.launch import mesh as mesh_mod
 from repro.parallel import compress
+from repro.serve import faults as faults_mod
 from repro.serve.cluster_service import (
-    ShardControlPlane, StreamConfig, _set_row,
+    ShardControlPlane, StreamConfig, _cs_from_host, _set_row,
 )
 
 AXIS = "shards"
@@ -105,6 +106,16 @@ def _data_plane(mesh, cfg: ddc.DDCConfig, cap: int, bmax: int, qmax: int):
 
     kill = jax.jit(smap(lane_kill, (s2, s2), s2), donate_argnums=(0,))
 
+    def lane_restore(pts, mask, npts, nmask, flag):
+        # Recovery upload: the flagged lane's buffers are replaced
+        # wholesale (journal-replayed state); other lanes untouched.
+        p = jnp.where(flag[0], npts[0], pts[0])
+        m = jnp.where(flag[0], nmask[0], mask[0])
+        return p[None], m[None]
+
+    restore = jax.jit(smap(lane_restore, (s3, s2, s3, s2, s1), (s3, s2)),
+                      donate_argnums=(0, 1))
+
     def lane_refresh(pts, mask, dense, cs, dirty):
         p, m = pts[0], mask[0]
         old = dense[0], jax.tree.map(lambda x: x[0], cs)
@@ -151,8 +162,8 @@ def _data_plane(mesh, cfg: ddc.DDCConfig, cap: int, bmax: int, qmax: int):
     query = jax.jit(smap(lane_query, (P(None, None), s3, s2, s2, s1),
                          (s2, s2)))
 
-    return {"append": append, "kill": kill, "refresh": refresh,
-            "labels": labels, "query": query}
+    return {"append": append, "kill": kill, "restore": restore,
+            "refresh": refresh, "labels": labels, "query": query}
 
 
 class DistClusterService(ShardControlPlane):
@@ -162,8 +173,9 @@ class DistClusterService(ShardControlPlane):
     and that the delta-ClusterSet exchange bytes are real transfers.
     """
 
-    def __init__(self, scfg: StreamConfig, meter: ddc.CommMeter | None = None):
-        super().__init__(scfg, meter)
+    def __init__(self, scfg: StreamConfig, meter: ddc.CommMeter | None = None,
+                 faults: faults_mod.FaultPlan | None = None):
+        super().__init__(scfg, meter, faults=faults)
         k, cap = scfg.shards, scfg.capacity
         require_devices(k)
         self.mesh = mesh_mod.make_host_mesh(k, axis=AXIS)
@@ -232,6 +244,17 @@ class DistClusterService(ShardControlPlane):
             self._lane_stage("kill", self._sh2,
                              np.asarray(kill, bool), shard))
 
+    def _restore_lane(self, shard, pts, live) -> None:
+        flags = np.zeros((self.scfg.shards,), bool)
+        flags[shard] = True
+        self._pts, self._mask = self._fns["restore"](
+            self._pts, self._mask,
+            self._lane_stage("rpts", self._sh3,
+                             np.asarray(pts, np.float32), shard),
+            self._lane_stage("rmask", self._sh2,
+                             np.asarray(live, bool), shard),
+            jax.device_put(flags, self._sh1))
+
     # -- refresh (lane-local phase 1 + delta exchange + merge) --------------
 
     def refresh(self, mode: str | None = None, force: bool = False):
@@ -241,7 +264,7 @@ class DistClusterService(ShardControlPlane):
         call sequence (and to a from-scratch re-merge)."""
         mode = mode or self.scfg.merge_mode
         k = self.scfg.shards
-        dirty = sorted(self._dirty)
+        dirty = sorted(self._dirty - self._quarantined.keys())
         if not dirty and self._global is not None and not force:
             return self._global
 
@@ -257,59 +280,105 @@ class DistClusterService(ShardControlPlane):
         # gathered fetch; a full re-merge genuinely re-ships every
         # lane's).  ``up_bytes`` is measured off the fetched arrays
         # themselves, so the meter reports what actually crossed — the
-        # bench's dist-vs-stream byte equality is an observation.
-        up_bytes = 0
+        # bench's dist-vs-stream byte equality is an observation.  Every
+        # payload then passes the control plane's delta exchange (fault
+        # seam, validation gate, retry, epoch fence) before it may touch
+        # the mirror; a retry is a genuine lane re-send, metered too.
+        up_bytes = [0]
+
+        def row_payload(rows, j):
+            return {"contours": rows.contours[j], "counts": rows.counts[j],
+                    "sizes": rows.sizes[j], "valid": rows.valid[j],
+                    "overflow": rows.overflow[j]}
+
+        def refetch(i):
+            row = jax.device_get(jax.tree.map(
+                lambda x: x[i], self._batch_dev))
+            up_bytes[0] += compress.pytree_wire_bytes(row)
+            return {"contours": row.contours, "counts": row.counts,
+                    "sizes": row.sizes, "valid": row.valid,
+                    "overflow": row.overflow}
+
         if mode == "delta" and self._pair_d2 is not None:
+            payloads = {}
             if dirty:
                 rows = jax.device_get(jax.tree.map(
                     lambda x: x[jnp.asarray(dirty)], self._batch_dev))
-                up_bytes = compress.pytree_wire_bytes(rows)
-                for j, i in enumerate(dirty):
-                    cs = ddc.ClusterSet(
-                        *[jnp.asarray(x[j]) for x in rows])
+                up_bytes[0] += compress.pytree_wire_bytes(rows)
+                payloads = {i: row_payload(rows, j)
+                            for j, i in enumerate(dirty)}
+
+            def produce(i, attempt):
+                if attempt == 0 and i in payloads:
+                    return payloads[i], None
+                return refetch(i), None
+
+            staged = self._exchange_deltas(dirty, produce)
+        else:
+            # All K lanes re-ship anyway: one bulk fetch; the dirty
+            # lanes' payloads still pass the gate, the clean lanes'
+            # mirror rows are refreshed in place (bit-identical values).
+            fetched = jax.device_get(self._batch_dev)
+            up_bytes[0] += compress.pytree_wire_bytes(fetched)
+            payloads = {i: row_payload(fetched, i) for i in dirty}
+
+            def produce(i, attempt):
+                if attempt == 0:
+                    return payloads[i], None
+                return refetch(i), None
+
+            staged = self._exchange_deltas(dirty, produce)
+            if not self._quarantined and set(staged) == set(dirty):
+                self._batch = ddc.ClusterSet(
+                    *[jnp.asarray(x) for x in fetched])
+                self._local = [jax.tree.map(lambda x, i=i: x[i], self._batch)
+                               for i in range(k)]
+            else:
+                for i in range(k):
+                    if i in self._quarantined or i in dirty:
+                        continue    # dirty rows went through the gate
+                    cs = _cs_from_host(row_payload(fetched, i))
                     self._local[i] = cs
                     self._batch = _set_row(self._batch, cs, i)
-        else:
-            # All K lanes re-ship anyway: one bulk fetch.
-            fetched = jax.device_get(self._batch_dev)
-            up_bytes = compress.pytree_wire_bytes(fetched)
-            self._batch = ddc.ClusterSet(
-                *[jnp.asarray(x) for x in fetched])
-            self._local = [jax.tree.map(lambda x, i=i: x[i], self._batch)
-                           for i in range(k)]
 
-        self._merge_and_meter(dirty, mode, up_bytes=up_bytes)
+        self._merge_and_meter(staged, mode, up_bytes=up_bytes[0])
         # Map rows back down, lane-local relabel; again metered from the
         # array actually pushed.
         maps_np = np.asarray(self._maps, np.int32)
         self._meter_maps_down(maps_np.nbytes)
         maps_dev = jax.device_put(maps_np, self._sh2)
         self._glabels = self._fns["labels"](self._dense, self._mask, maps_dev)
-        self._dirty.clear()
+        self._dirty -= set(staged)
         self.refreshes += 1
         return self._global
 
     # -- read path ----------------------------------------------------------
 
-    def query(self, points: np.ndarray) -> np.ndarray:
+    def query(self, points: np.ndarray, return_stale: bool = False):
         """Global cluster id per query point (nearest clustered live
         point within ``eps``, else -1), computed lane-local on the
         bbox-routed candidate shards and folded on the host in ascending
         shard order (ties match the host-driven engine's flat argmin).
+        Quarantined lanes are routed around; ``return_stale=True``
+        returns ``(labels, stale)`` (see ``ClusterService.query``).
         """
         q = np.asarray(points, np.float32).reshape(-1, 2)
+        self.last_query_degraded = False
         if self._global is None and self.n_live() == 0:
-            return np.full((len(q),), -1, np.int32)
+            out = np.full((len(q),), -1, np.int32)
+            return (out, False) if return_stale else out
         if self._dirty or self._global is None:
             self.refresh()
         qmax = self.scfg.max_queries
         k = self.scfg.shards
         eps2 = np.float32(self.cfg.eps) * np.float32(self.cfg.eps)
+        degraded = False
         out = np.empty((len(q),), np.int32)
         for off in range(0, len(q), qmax):
             chunk = q[off:off + qmax]
             nq = len(chunk)
             scan = self._route(chunk)
+            degraded |= self._route_degraded
             if not scan.any():
                 out[off:off + nq] = -1
                 continue
@@ -326,7 +395,10 @@ class DistClusterService(ShardControlPlane):
                 best = np.where(upd, bd[s], best)   # the flat argmin
                 lab = np.where(upd, bl[s], lab)
             out[off:off + nq] = np.where(best <= eps2, lab, -1)[:nq]
-        return out
+        self.last_query_degraded = degraded
+        if degraded:
+            self.degraded_queries += 1
+        return (out, degraded) if return_stale else out
 
     # -- introspection -------------------------------------------------------
 
@@ -348,8 +420,10 @@ class DistClusterService(ShardControlPlane):
 
     @classmethod
     def from_state(cls, scfg: StreamConfig, arrays: dict, manifest: dict,
-                   meter: ddc.CommMeter | None = None) -> "DistClusterService":
-        svc = cls(scfg, meter=meter)
+                   meter: ddc.CommMeter | None = None,
+                   faults: faults_mod.FaultPlan | None = None
+                   ) -> "DistClusterService":
+        svc = cls(scfg, meter=meter, faults=faults)
         svc._pts = jax.device_put(
             np.asarray(arrays["pts"], np.float32), svc._sh3)
         svc._mask = jax.device_put(np.asarray(arrays["mask"], bool), svc._sh2)
@@ -365,7 +439,7 @@ class DistClusterService(ShardControlPlane):
         if manifest.get("has_global") and "pair_d2" in arrays:
             svc._pair_d2 = jnp.asarray(arrays["pair_d2"], jnp.float32)
             svc._global, svc._maps = ddc.merge_from_d2(
-                svc._batch, svc._pair_d2, svc.cfg)
+                svc._batch, svc._pair_d2, svc.cfg, svc._exclude_mask())
             maps_dev = jax.device_put(
                 np.asarray(svc._maps, np.int32), svc._sh2)
             svc._glabels = svc._fns["labels"](svc._dense, svc._mask, maps_dev)

@@ -1,0 +1,144 @@
+"""Seeded chaos sweep for the serve failure model (DESIGN.md §11), run
+under an 8-device CPU override by tests/test_chaos.py.
+
+For random seeded ``FaultPlan``s over the tuned layouts × {2, 4, 8}
+shards × both serve engines (``stream`` host-driven, ``dist``
+device-resident), streamed against a fault-free twin fed the identical
+ingest schedule:
+
+1. **No plan corrupts the aggregator** — after every refresh under
+   faults, the cached pair-d2 matrix is NaN/inf-free (mangled deltas
+   must die at the validation gate, never in the cache).
+2. **Healthy shards keep serving** — mid-outage queries answer (with
+   the staleness flag raised when a quarantined shard mattered).
+3. **Recovery converges bit-for-bit** — after ``recover_all`` +
+   refresh, global labels AND the cached pair-d2 matrix equal the
+   uninterrupted twin exactly; a from-scratch full re-merge agrees.
+
+Modes (argv[1]): ``quick`` (one layout, fixed seeds), ``all`` (every
+layout, hypothesis-drawn seeds when available), or a layout name.
+Prints PASS lines; any exception fails.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np
+
+from repro.data import spatial
+from repro.ddc import DDC, DDCConfig
+from repro.serve import FaultPlan
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from _hyp import HAVE_HYPOTHESIS, given, settings, st  # noqa: E402
+
+N = 1024
+BATCH = 64
+SHARD_COUNTS = (2, 4, 8)
+BACKENDS = ("stream", "dist")
+
+
+def build(layout: str, k: int, backend: str, faults=None):
+    spec = spatial.PHASE2_LAYOUTS[layout]
+    cap = spatial.shard_capacity(N, k)
+    cfg = DDCConfig(
+        eps=spec["eps"], min_pts=spec["min_pts"], grid=spec["grid"],
+        max_clusters=spec["max_clusters"], max_verts=spec["max_verts"],
+        backend=backend, shards=k, capacity=cap,
+        max_batch=min(BATCH, cap)).validate()
+    return DDC(cfg, faults=faults)
+
+
+def assert_cache_clean(svc):
+    d2 = svc.pair_d2
+    if d2 is not None:
+        assert np.isfinite(np.asarray(d2)).all(), \
+            "NaN/inf reached the cached pair-d2 matrix"
+
+
+def chaos_one(layout: str, k: int, backend: str, seed: int):
+    plan = FaultPlan.random(seed=seed, shards=k, n_faults=3, horizon=2)
+    spec = spatial.PHASE2_LAYOUTS[layout]
+    pts = spec["make"](N)
+    faulted = build(layout, k, backend, faults=plan)
+    twin = build(layout, k, backend)
+    probes = pts[:: max(1, N // 32)].copy()
+
+    for shard, chunk in spatial.stream_batches(pts, k, BATCH):
+        for model in (faulted, twin):
+            model.partial_fit(shard, chunk)
+            model.service.refresh()
+        # (1) the fault seam may quarantine, retry, fence — but the
+        # aggregator cache must never see a mangled value
+        assert_cache_clean(faulted.service)
+        # (2) healthy shards answer mid-outage; stale iff a quarantined
+        # shard could have mattered
+        if faulted.service.quarantined:
+            labels, stale = faulted.service.query(probes, return_stale=True)
+            assert labels.shape == (len(probes),)
+
+    # (3) recovery converges: rejoin everyone (a recovered shard's next
+    # delivery may hit a later scheduled fault, so iterate to drain the
+    # plan — it is finite and one-shot per event)
+    for _ in range(8):
+        if not faulted.service.quarantined:
+            break
+        faulted.service.recover_all()
+        faulted.service.refresh()
+    assert not faulted.service.quarantined, faulted.service.quarantined
+    assert_cache_clean(faulted.service)
+
+    np.testing.assert_array_equal(
+        faulted.labels_, twin.labels_,
+        err_msg="post-recovery labels diverged from fault-free twin")
+    d2 = np.asarray(faulted.service.pair_d2)
+    np.testing.assert_array_equal(
+        d2, np.asarray(twin.service.pair_d2),
+        err_msg="post-recovery pair-d2 diverged from fault-free twin")
+    # and the delta-maintained cache still equals a from-scratch rebuild
+    faulted.service.remerge_full()
+    np.testing.assert_array_equal(
+        d2, np.asarray(faulted.service.pair_d2),
+        err_msg="post-recovery delta cache != full rebuild")
+
+    st_ = faulted.service.stats()
+    print(f"PASS {layout} {backend} k={k} seed={seed} "
+          f"quarantines={st_['quarantined_shards']} retries={st_['retries']} "
+          f"fenced={st_['fenced_deltas']}")
+
+
+def sweep(layouts, seeds):
+    for layout in layouts:
+        for k in SHARD_COUNTS:
+            for backend in BACKENDS:
+                for seed in seeds:
+                    chaos_one(layout, k, backend, seed)
+
+
+def sweep_hypothesis(layouts):
+    if not HAVE_HYPOTHESIS:
+        sweep(layouts, seeds=(0, 1, 2))
+        return
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           k=st.sampled_from(SHARD_COUNTS),
+           backend=st.sampled_from(BACKENDS),
+           layout=st.sampled_from(tuple(layouts)))
+    def run(seed, k, backend, layout):
+        chaos_one(layout, k, backend, seed)
+
+    run()
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "quick"
+    if which == "quick":
+        sweep(["linked_ovals"], seeds=(0,))
+    elif which == "all":
+        sweep(sorted(spatial.PHASE2_LAYOUTS), seeds=(0, 1))
+        sweep_hypothesis(sorted(spatial.PHASE2_LAYOUTS))
+    else:
+        sweep([which], seeds=(0, 1))
+    print("ALL_OK")

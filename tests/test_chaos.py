@@ -1,0 +1,44 @@
+"""Chaos harness: seeded random FaultPlans against both serve engines.
+
+The sweep needs ``len(jax.devices()) >= 8`` for the dist lanes, so it
+runs in a subprocess with the 8-device CPU override
+(tests/_chaos_script.py), mirroring the dist-backend suite's pattern.
+The quick tier keeps tier-1 blocking time low; the full layout × shard
+× seed sweep (plus hypothesis-drawn plans where the dev extra is
+installed) is marked ``slow`` and runs in the dedicated chaos CI job.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = os.path.join(os.path.dirname(__file__), "_chaos_script.py")
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_script(arg: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(SRC)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, SCRIPT, arg],
+        capture_output=True, text=True, timeout=1800, env=env)
+    assert proc.returncode == 0, (
+        f"{arg} failed:\n{proc.stdout}\n{proc.stderr}")
+    return proc.stdout
+
+
+def test_chaos_quick():
+    """One layout, both engines, 2/4/8 shards, fixed seed: no plan
+    corrupts the pair-d2 cache; recovery is bit-exact vs the twin."""
+    out = run_script("quick")
+    assert "ALL_OK" in out and out.count("PASS") == 6
+
+
+@pytest.mark.slow
+def test_chaos_full_sweep():
+    """Every layout × 2/4/8 shards × both engines × multiple seeds,
+    plus hypothesis-drawn plans when available."""
+    out = run_script("all")
+    assert "ALL_OK" in out

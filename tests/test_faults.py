@@ -1,0 +1,327 @@
+"""Failure-model suite for the serve stack (DESIGN.md §11).
+
+Covers the fault-injection seam end to end on the host-driven engine:
+the validation gate must reject poisoned/corrupt deltas BEFORE the
+cached pair-d2 matrix is touched, transient drops heal through the
+retry loop with no state divergence, duplicates are epoch-fenced
+(exactly-once merge), a killed lane quarantines and healthy shards keep
+serving (with the staleness flag raised), and journal-replay recovery
+lands bit-exactly on the fault-free twin — labels AND the cached
+pair-d2 matrix.  Plus the snapshot-robustness satellites: every way a
+snapshot directory can be damaged must raise ``SnapshotError`` from
+``DDC.load`` without disturbing a live model.
+
+The multi-backend chaos sweep (random seeded plans, 2/4/8 shards,
+stream AND dist) lives in tests/_chaos_script.py / test_chaos.py; this
+file is the fast in-process tier.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import ddc
+from repro.data import spatial
+from repro.serve import (
+    ClusterService,
+    FaultEvent,
+    FaultPlan,
+    StreamConfig,
+)
+
+N = 640
+K = 4
+CAP = None  # spatial.shard_capacity(N, K), resolved in build()
+
+
+def build(layout="rings", k=K, faults=None, journal_limit=1024,
+          max_retries=2):
+    spec = spatial.PHASE2_LAYOUTS[layout]
+    pts = spec["make"](N)
+    cap = spatial.shard_capacity(N, k)
+    scfg = StreamConfig(
+        shards=k, capacity=cap, max_batch=min(160, cap),
+        max_retries=max_retries, journal_limit=journal_limit,
+        ddc=ddc.DDCConfig(
+            eps=spec["eps"], min_pts=spec["min_pts"], grid=spec["grid"],
+            max_clusters=spec["max_clusters"], max_verts=spec["max_verts"]))
+    return ClusterService(scfg, faults=faults), pts, spec
+
+
+def stream_in(svc, pts, k, batch=160):
+    for shard, chunk in spatial.stream_batches(pts, k, batch):
+        svc.ingest(shard, chunk)
+        svc.refresh()
+
+
+def assert_bitexact(faulted, twin):
+    """Post-recovery contract: labels AND the cached pair-d2 matrix of
+    the faulted service are bit-identical to the uninterrupted twin."""
+    pa, pb = faulted.pair_d2, twin.pair_d2
+    assert pa is not None and pb is not None
+    assert np.array_equal(np.asarray(pa), np.asarray(pb)), \
+        "cached pair-d2 diverged from the fault-free twin"
+    fp, _, fl = faulted.live()
+    tp, _, tl = twin.live()
+    assert np.array_equal(fp, tp)
+    assert np.array_equal(fl, tl), \
+        "global labels diverged from the fault-free twin"
+
+
+def twins(faults, **kw):
+    """A faulted service and its fault-free twin, fed identically."""
+    svc_f, pts, spec = build(faults=faults, **kw)
+    svc_t, _, _ = build(**kw)
+    stream_in(svc_f, pts, K)
+    stream_in(svc_t, pts, K)
+    return svc_f, svc_t, pts, spec
+
+
+class TestValidationGate:
+    @pytest.mark.parametrize("kind", ["poison", "corrupt"])
+    def test_bad_delta_rejected_before_pair_d2(self, kind):
+        """A mangled delta must quarantine its shard and leave the
+        cached pair-d2 matrix bit-untouched — the gate runs BEFORE any
+        aggregator state."""
+        svc, pts, spec = build()
+        stream_in(svc, pts, K)
+        before = np.asarray(svc.pair_d2)
+        svc.faults = FaultPlan(events=(FaultEvent(kind, shard=1),), seed=3)
+        svc.ingest(1, pts[:16])
+        svc.refresh()
+        assert 1 in svc.quarantined
+        assert "rejected" in svc.quarantined[1]
+        assert np.array_equal(before, np.asarray(svc.pair_d2)), \
+            f"{kind} delta reached the pair-d2 cache"
+
+    def test_healthy_shards_keep_serving_degraded(self):
+        """During quarantine the service answers from healthy shards and
+        flags the answer stale exactly when the lost shard mattered."""
+        svc, pts, spec = build()
+        stream_in(svc, pts, K)
+        svc.faults = FaultPlan(events=(FaultEvent("poison", shard=1),))
+        svc.ingest(1, pts[:16])
+        svc.refresh()
+        labels, stale = svc.query(pts[:64], return_stale=True)
+        assert labels.shape == (64,)        # healthy shards answered
+        assert stale                        # round-robin: shard 1 mattered
+        assert svc.last_query_degraded
+        assert svc.degraded_queries == 1
+        assert svc.stats()["quarantined_now"] == [1]
+
+
+class TestRetryAndFencing:
+    def test_transient_drop_heals_by_retry(self):
+        plan = FaultPlan(events=(
+            FaultEvent("drop", shard=0, delivery=None, attempts=1),))
+        svc_f, svc_t, pts, _ = twins(None)
+        svc_f.faults = plan
+        for svc in (svc_f, svc_t):
+            svc.ingest(0, pts[:32])
+            svc.refresh()
+        assert svc_f.retries >= 1
+        assert not svc_f.quarantined
+        assert_bitexact(svc_f, svc_t)
+
+    def test_exhausted_drop_quarantines(self):
+        plan = FaultPlan(events=(
+            FaultEvent("drop", shard=2, delivery=None, attempts=5),))
+        svc, pts, _ = build(faults=None, max_retries=2)
+        stream_in(svc, pts, K)
+        svc.faults = plan
+        svc.ingest(2, pts[:32])
+        svc.refresh()
+        assert 2 in svc.quarantined
+        assert "dropped" in svc.quarantined[2]
+        assert svc.retries >= 2
+
+    def test_duplicate_delivery_is_fenced(self):
+        """A late duplicate of an already-merged delta must be discarded
+        by the epoch fence (exactly-once), not re-merged."""
+        plan = FaultPlan(events=(FaultEvent("dup", shard=3),))
+        svc_f, svc_t, pts, _ = twins(None)
+        svc_f.faults = plan
+        for svc in (svc_f, svc_t):
+            svc.ingest(3, pts[:32])
+            svc.refresh()
+        assert svc_f.fenced_deltas == 1
+        assert not svc_f.quarantined
+        assert_bitexact(svc_f, svc_t)
+
+
+class TestKillAndRecovery:
+    def test_kill_recover_bitexact(self):
+        """The tentpole contract: lane killed mid-refresh -> quarantine
+        (healthy shards keep serving) -> journal-replay recovery ->
+        state bit-identical to the uninterrupted twin."""
+        plan = FaultPlan(events=(FaultEvent("kill", shard=1),))
+        svc_f, svc_t, pts, _ = twins(None)
+        svc_f.faults = plan
+        for svc in (svc_f, svc_t):
+            svc.ingest(1, pts[:32])
+            svc.refresh()                 # faulted: lane 1 dies here
+        assert 1 in svc_f.quarantined
+        # Writes keep landing during the outage: journaled + mirrored,
+        # device lane untouched until recovery.
+        for svc in (svc_f, svc_t):
+            svc.ingest(1, pts[32:64])
+            svc.ingest(0, pts[64:96])
+            svc.refresh()
+        assert 1 in svc_f.quarantined     # still out
+        assert svc_f.recover(1)
+        svc_f.refresh()
+        assert not svc_f.quarantined
+        assert_bitexact(svc_f, svc_t)
+        # idempotent: recovering a healthy shard is a no-op
+        assert not svc_f.recover(1)
+
+    def test_recovery_with_journal_compaction(self):
+        """A tiny journal_limit forces compactions mid-stream; replay
+        from the compacted base must still land bit-exactly."""
+        plan = FaultPlan(events=(FaultEvent("kill", shard=0),))
+        svc_f, _, _ = build(faults=plan, journal_limit=2)
+        svc_t, pts, _ = build(journal_limit=2)
+        stream_in(svc_f, pts, K, batch=40)
+        stream_in(svc_t, pts, K, batch=40)
+        assert svc_f._journal.compactions > 0
+        for svc in (svc_f, svc_t):
+            svc.evict_oldest(0, 8)        # kill entries journal too
+            svc.ingest(0, pts[:32])
+            svc.refresh()
+        assert 0 in svc_f.quarantined
+        assert svc_f.recover(0)
+        svc_f.refresh()
+        assert_bitexact(svc_f, svc_t)
+
+    def test_quarantine_survives_snapshot(self):
+        """state_dict/from_state round-trips the quarantine set, epochs,
+        and counters; recovery still works on the restored service."""
+        plan = FaultPlan(events=(FaultEvent("kill", shard=2),))
+        svc_f, svc_t, pts, _ = twins(None)
+        svc_f.faults = plan
+        for svc in (svc_f, svc_t):
+            svc.ingest(2, pts[:32])
+            svc.refresh()
+        assert 2 in svc_f.quarantined
+        arrays, manifest = svc_f.state_dict()
+        svc_r = ClusterService.from_state(svc_f.scfg, arrays, manifest)
+        assert 2 in svc_r.quarantined
+        assert svc_r.quarantine_events == svc_f.quarantine_events
+        assert svc_r.recover(2)
+        svc_r.refresh()
+        assert_bitexact(svc_r, svc_t)
+
+
+class TestCounters:
+    def test_stats_expose_failure_counters(self):
+        svc, pts, _ = build()
+        stream_in(svc, pts, K)
+        st = svc.stats()
+        for key in ("refreshes", "retries", "quarantined_shards",
+                    "quarantined_now", "fenced_deltas", "degraded_queries",
+                    "journal_entries"):
+            assert key in st, key
+        assert st["refreshes"] > 0
+        assert st["journal_entries"] > 0
+        assert st["retries"] == 0 and st["quarantined_shards"] == 0
+
+    def test_facade_comm_stats_expose_counters(self):
+        from repro.ddc import DDC, DDCConfig
+
+        spec = spatial.PHASE2_LAYOUTS["rings"]
+        pts = spec["make"](N)
+        cfg = DDCConfig(
+            eps=spec["eps"], min_pts=spec["min_pts"], grid=spec["grid"],
+            max_clusters=spec["max_clusters"], max_verts=spec["max_verts"],
+            backend="stream", shards=K,
+            capacity=spatial.shard_capacity(N, K), max_batch=160)
+        model = DDC(cfg).fit(pts)
+        cs = model.comm_stats()
+        for key in ("refreshes", "retries", "quarantined_shards",
+                    "journal_entries"):
+            assert key in cs, key
+
+
+class TestSnapshotRobustness:
+    def _fit_model(self):
+        from repro.ddc import DDC, DDCConfig
+
+        spec = spatial.PHASE2_LAYOUTS["rings"]
+        pts = spec["make"](N)
+        cfg = DDCConfig(
+            eps=spec["eps"], min_pts=spec["min_pts"], grid=spec["grid"],
+            max_clusters=spec["max_clusters"], max_verts=spec["max_verts"],
+            backend="stream", shards=K,
+            capacity=spatial.shard_capacity(N, K), max_batch=160)
+        return DDC(cfg).fit(pts), pts
+
+    def test_truncated_npz_raises_snapshot_error(self, tmp_path):
+        from repro.ddc import DDC, SnapshotError
+
+        model, pts = self._fit_model()
+        path = str(tmp_path / "snap")
+        model.save(path)
+        labels_before = model.labels_.copy()
+        target = os.path.join(path, "state.npz")
+        size = os.path.getsize(target)
+        with open(target, "r+b") as f:
+            f.truncate(size // 2)
+        with pytest.raises(SnapshotError):
+            DDC.load(path)
+        # the failed load never touches the live model
+        assert np.array_equal(model.labels_, labels_before)
+
+    def test_corrupt_manifest_raises_snapshot_error(self, tmp_path):
+        from repro.ddc import DDC, SnapshotError
+
+        model, _ = self._fit_model()
+        path = str(tmp_path / "snap")
+        model.save(path)
+        with open(os.path.join(path, "manifest.json"), "w") as f:
+            f.write('{"format": "repro-ddc/v1", "config": {')
+        with pytest.raises(SnapshotError):
+            DDC.load(path)
+
+    def test_wrong_format_tag_raises_snapshot_error(self, tmp_path):
+        from repro.ddc import DDC, SnapshotError
+
+        model, _ = self._fit_model()
+        path = str(tmp_path / "snap")
+        model.save(path)
+        mf = os.path.join(path, "manifest.json")
+        with open(mf) as f:
+            doc = json.load(f)
+        doc["format"] = "repro-ddc/v999"
+        with open(mf, "w") as f:
+            json.dump(doc, f)
+        with pytest.raises(SnapshotError):
+            DDC.load(path)
+
+    def test_missing_dir_raises_snapshot_error(self, tmp_path):
+        from repro.ddc import DDC, SnapshotError
+
+        with pytest.raises(SnapshotError):
+            DDC.load(str(tmp_path / "nope"))
+
+    def test_torn_snapshot_fault_is_detected(self, tmp_path):
+        """FaultPlan(torn_snapshot=True) byte-tears exactly one save;
+        loading it must fail loudly, and the next save is whole again."""
+        from repro.ddc import DDC, DDCConfig, SnapshotError
+
+        spec = spatial.PHASE2_LAYOUTS["rings"]
+        pts = spec["make"](N)
+        cfg = DDCConfig(
+            eps=spec["eps"], min_pts=spec["min_pts"], grid=spec["grid"],
+            max_clusters=spec["max_clusters"], max_verts=spec["max_verts"],
+            backend="stream", shards=K,
+            capacity=spatial.shard_capacity(N, K), max_batch=160)
+        model = DDC(cfg, faults=FaultPlan(torn_snapshot=True)).fit(pts)
+        torn = str(tmp_path / "torn")
+        model.save(torn)
+        with pytest.raises(SnapshotError):
+            DDC.load(torn)
+        whole = str(tmp_path / "whole")
+        model.save(whole)                 # the tear is one-shot
+        restored = DDC.load(whole)
+        assert np.array_equal(restored.labels_, model.labels_)
