@@ -118,8 +118,10 @@ def check_phase2(doc: dict):
 
 
 def check_serve(doc: dict):
-    _require(doc.get("schema") == "serve-bench/v1",
-             f"serve: bad schema tag {doc.get('schema')!r}")
+    schema = doc.get("schema")
+    _require(schema in ("serve-bench/v1", "serve-bench/v2"),
+             f"serve: bad schema tag {schema!r}")
+    v2 = schema == "serve-bench/v2"
     smoke = bool(doc.get("smoke", False))
     rows = _typed(doc, "rows", list, "serve")
     _require(len(rows) > 0, "serve: rows is empty")
@@ -168,6 +170,27 @@ def check_serve(doc: dict):
                      <= _typed(row, "query_shards_possible", int, ctx),
                      f"{ctx}: scanned-shard counter exceeds the possible "
                      f"shard scans")
+        if v2:
+            # The high-QPS tier rows (DESIGN.md §12): latency quantiles,
+            # sustained throughput, and the frozen-twin exactness gate.
+            p50 = _typed(row, "p50_ms", (int, float), ctx)
+            p99 = _typed(row, "p99_ms", (int, float), ctx)
+            _require(0 < p50 <= p99,
+                     f"{ctx}: latency quantiles disordered "
+                     f"(p50={p50}, p99={p99})")
+            _require(_typed(row, "qps", (int, float), ctx) > 0,
+                     f"{ctx}: qps <= 0")
+            _require(_typed(row, "query_launches", int, ctx) >= 1,
+                     f"{ctx}: the tier never launched a kernel")
+            _require(_typed(row, "coalesced_requests", int, ctx) >= 0,
+                     f"{ctx}: negative coalesced_requests")
+            _require(_typed(row, "snapshot_version", int, ctx) >= 1,
+                     f"{ctx}: tier reads never saw a published snapshot")
+            _require(_typed(row, "jit_cache_bound", int, ctx) >= 1,
+                     f"{ctx}: jit_cache_bound < 1")
+            _require(_typed(row, "snapshot_matches_sync", bool, ctx) is True,
+                     f"{ctx}: snapshot-versioned reads diverged from the "
+                     f"sync engine query on the frozen state")
         seen.add((layout, be, k))
         delta_by_cell[(layout, be, k)] = delta
     for layout in layouts:
@@ -190,6 +213,9 @@ def check_serve(doc: dict):
     summary = _typed(doc, "summary", dict, "serve")
     _require(summary.get("all_match_host") is True,
              "serve.summary: all_match_host is not true")
+    if v2:
+        _require(summary.get("all_snapshot_match_sync") is True,
+                 "serve.summary: all_snapshot_match_sync is not true")
     _require(summary.get("delta_lt_full_at_high_shards") is True,
              "serve.summary: delta-merge did not beat full re-merge")
     if doc.get("backend") == "mixed":
@@ -250,7 +276,7 @@ def check_file(path: str):
     if doc.get("schema") == "phase2-bench/v1":
         check_phase2(doc)
         return "phase2"
-    if doc.get("schema") == "serve-bench/v1":
+    if doc.get("schema") in ("serve-bench/v1", "serve-bench/v2"):
         check_serve(doc)
         return "serve"
     if doc.get("schema") == "recovery-bench/v1":

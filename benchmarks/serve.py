@@ -19,9 +19,15 @@ measures steady state:
 * **matches_host** — the final streaming labels must reproduce batch
   ``ddc_host`` on the live points bit-exactly (hard-fails otherwise),
   and the delta-maintained distance matrix must equal the recomputed
-  one bit-for-bit (``delta_equals_full``).
+  one bit-for-bit (``delta_equals_full``);
+* **p50/p99/QPS** — the high-QPS tier (DESIGN.md §12): a stream of
+  small requests through the bounded ``QueryTier`` queue, coalesced
+  into batched snapshot reads.  Every tier answer is re-checked
+  bit-exactly against the sync engine query on the same frozen state
+  (``snapshot_matches_sync``, hard-fails otherwise).  ``--qps`` raises
+  the request count for a sustained-QPS measurement.
 
-Writes ``BENCH_serve.json`` (schema ``serve-bench/v1``,
+Writes ``BENCH_serve.json`` (schema ``serve-bench/v2``,
 ``benchmarks/check_bench.py``).  ``--smoke`` trims the shard sweep for
 CI; ``--backend`` picks stream/dist/both (dist forces a CPU device-count
 override before jax initialises: 8 for smoke, 16 for the full sweep).
@@ -41,6 +47,9 @@ def _parse_args(argv=None):
                    help="tiny CI subset: 2/4 shards only")
     p.add_argument("--backend", choices=("stream", "dist", "both"),
                    default="both", help="which serve engine(s) to bench")
+    p.add_argument("--qps", action="store_true",
+                   help="raise the tier request count for a sustained-QPS "
+                        "measurement (latency rows are always present)")
     p.add_argument("--out", default=None, help="output JSON path")
     return p.parse_args(argv)
 
@@ -63,15 +72,55 @@ from repro.core import ddc                            # noqa: E402
 from repro.data import spatial                        # noqa: E402
 from repro.ddc import DDC, DDCConfig                  # noqa: E402
 from repro.parallel import compress                   # noqa: E402
+from repro.serve import query_tier as qt              # noqa: E402
 
 N = 2048
 BATCH = 256
 QUERIES = 256
+REQ_POINTS = 32          # query points per tier request
 LAYOUTS = spatial.PHASE2_LAYOUTS
 
 
+def bench_tier(model, svc, k: int, n_requests: int) -> dict:
+    """The high-QPS tier rows (DESIGN.md §12): p50/p99 request latency
+    and sustained QPS through the bounded queue, answered from the
+    published snapshot in coalesced pow2-bucketed launches — then every
+    answer re-checked bit-exactly against the sync engine query on the
+    same frozen state."""
+    tier = qt.QueryTier(svc, max_queries=QUERIES,
+                        max_staleness=float("inf"))
+    svc.read_snapshot()          # publish the frozen state under test
+    rng = np.random.default_rng(1)
+    req_pts = [rng.uniform(0, 1, (REQ_POINTS, 2)).astype(np.float32)
+               for _ in range(n_requests)]
+    tier.query(req_pts[0])       # compile the bucketed kernel
+    handles = []
+    t0 = time.perf_counter()
+    for off in range(0, n_requests, 8):
+        burst = [tier.submit(p) for p in req_pts[off:off + 8]]
+        tier.drain()
+        handles.extend(burst)
+    wall_s = time.perf_counter() - t0
+    lat = np.array([h.result.latency_ms for h in handles])
+    matches = all(
+        np.array_equal(np.asarray(h.result), svc.query(p, legacy=True))
+        for p, h in zip(req_pts, handles))
+    counters = tier.counters()
+    return {
+        "qps_requests": n_requests,
+        "qps": round(n_requests / wall_s, 1),
+        "p50_ms": round(float(np.percentile(lat, 50)), 3),
+        "p99_ms": round(float(np.percentile(lat, 99)), 3),
+        "query_launches": counters["query_launches"],
+        "coalesced_requests": counters["coalesced_requests"],
+        "snapshot_version": handles[-1].result.version,
+        "jit_cache_bound": tier.cache_bound(k),
+        "snapshot_matches_sync": bool(matches),
+    }
+
+
 def bench_cell(name: str, spec: dict, k: int, backend: str,
-               reps: int = 3) -> dict:
+               reps: int = 3, qps_requests: int = 24) -> dict:
     pts = spec["make"](N)
     cap = spatial.shard_capacity(N, k)
     batch = min(BATCH, cap)      # high shard counts shrink the buffers
@@ -121,6 +170,8 @@ def bench_cell(name: str, spec: dict, k: int, backend: str,
     query_ms = min_time(lambda: model.query(q), reps)
     routing = svc.routing_stats()
 
+    tier_row = bench_tier(model, svc, k, qps_requests)
+
     live_pts, parts, labels = svc.live()
     host_labels, _, _ = ddc.ddc_host(
         live_pts, len(parts), spec["eps"], spec["min_pts"],
@@ -147,7 +198,7 @@ def bench_cell(name: str, spec: dict, k: int, backend: str,
         "n_clusters": int(np.asarray(svc.global_set.valid).sum()),
         "matches_host": ddc.same_clustering(labels, host_labels),
         "delta_equals_full": bool(np.array_equal(d2_delta, d2_full)),
-    }
+    } | tier_row
 
 
 def min_time(fn, reps: int) -> float:
@@ -160,9 +211,10 @@ def min_time(fn, reps: int) -> float:
 
 
 def run(smoke: bool = False, out_path: str | None = None,
-        backend: str = "both", print_rows: bool = True):
+        backend: str = "both", print_rows: bool = True, qps: bool = False):
     shards = (2, 4) if smoke else (2, 4, 8, 16)
     backends = ("stream", "dist") if backend == "both" else (backend,)
+    qps_requests = 96 if qps else 24
     rows = []
     layouts_meta = {}
     for name, spec in LAYOUTS.items():
@@ -172,7 +224,8 @@ def run(smoke: bool = False, out_path: str | None = None,
         } | {"n": N}
         for be in backends:
             for k in shards:
-                row = bench_cell(name, spec, k, be)
+                row = bench_cell(name, spec, k, be,
+                                 qps_requests=qps_requests)
                 rows.append(row)
                 if print_rows:
                     print(f"serve_{be}_{name}_k{k}: "
@@ -180,12 +233,17 @@ def run(smoke: bool = False, out_path: str | None = None,
                           f"query={row['query_ms']}ms "
                           f"delta={row['delta_bytes']}B/{row['delta_refresh_ms']}ms "
                           f"full={row['full_bytes']}B/{row['full_refresh_ms']}ms "
-                          f"match={row['matches_host']}")
+                          f"p50={row['p50_ms']}ms p99={row['p99_ms']}ms "
+                          f"qps={row['qps']} "
+                          f"match={row['matches_host']} "
+                          f"snap={row['snapshot_matches_sync']}")
 
     all_match = all(r["matches_host"] and r["delta_equals_full"] for r in rows)
+    all_snap = all(r["snapshot_matches_sync"] for r in rows)
     high_k = [r for r in rows if r["shards"] >= 8]
     summary = {
         "all_match_host": all_match,
+        "all_snapshot_match_sync": all_snap,
         "n_layouts": len(LAYOUTS),
         "max_shards": max(shards),
         "delta_lt_full_at_high_shards": all(
@@ -204,7 +262,7 @@ def run(smoke: bool = False, out_path: str | None = None,
             for r in rows if r["backend"] == "dist")
         summary["dist_axis_bytes_le_stream_delta"] = dist_ok
     out = {
-        "schema": "serve-bench/v1",
+        "schema": "serve-bench/v2",
         "smoke": bool(smoke),
         "backend": "mixed" if backend == "both" else backend,
         "n": N,
@@ -222,11 +280,13 @@ def run(smoke: bool = False, out_path: str | None = None,
     if print_rows:
         print("summary:", json.dumps(summary))
         print("wrote", out_path)
-    failed = not all_match or not summary["delta_lt_full_at_high_shards"] \
+    failed = not all_match or not all_snap \
+        or not summary["delta_lt_full_at_high_shards"] \
         or not summary.get("dist_axis_bytes_le_stream_delta", True)
     if failed:
         bad = [(r["backend"], r["layout"], r["shards"]) for r in rows
-               if not (r["matches_host"] and r["delta_equals_full"])]
+               if not (r["matches_host"] and r["delta_equals_full"]
+                       and r["snapshot_matches_sync"])]
         if backend == "both":
             bad += [("dist>stream", r["layout"], r["shards"])
                     for r in rows if r["backend"] == "dist"
@@ -238,4 +298,5 @@ def run(smoke: bool = False, out_path: str | None = None,
 
 
 if __name__ == "__main__":
-    run(smoke=_ARGS.smoke, out_path=_ARGS.out, backend=_ARGS.backend)
+    run(smoke=_ARGS.smoke, out_path=_ARGS.out, backend=_ARGS.backend,
+        qps=_ARGS.qps)

@@ -8,7 +8,11 @@ The canonical snippet — one config, one facade, any backend:
                     ...).validate(sample=pts)     # DESIGN §7 sizing probe
     model = DDC(cfg).fit(pts)                     # phase 1 + phase 2
     model.labels_                                 # global cluster ids
-    model.query(probes)                           # point -> cluster id
+    res = model.query(probes)                     # QueryResult (§12):
+    res.labels, res.version, res.degraded         #   still duck-types as
+    np.asarray(res)                               #   the labels ndarray
+    model.query_tier.submit(probes); model.query_tier.drain()
+    model.stats()                                 # typed ServiceStats
     model.partial_fit(shard, batch, t=now)        # streaming writes
     model.expire(now - window)                    # TTL eviction
     model.save(path); DDC.load(path)              # bit-identical resume
@@ -97,8 +101,24 @@ def main():
               f"padded ClusterSet buffers, never raw points")
 
     # Read path: point -> global cluster id (DBSCAN's border rule).
+    # query() returns a QueryResult (DESIGN §12): the labels plus the
+    # snapshot version that answered, the degraded flag, and the routed
+    # shard set — and it still duck-types as the labels ndarray.
     probes = np.array([[0.30, 0.65], [0.62, 0.22], [0.02, 0.98]])
-    print(f"query {probes.tolist()} -> {model.query(probes).tolist()}")
+    res = model.query(probes)
+    print(f"query {probes.tolist()} -> {res.tolist()}   "
+          f"(snapshot v{res.version}, degraded={res.degraded})")
+
+    # The high-QPS tier: requests enter a bounded queue and are answered
+    # from the last published snapshot in coalesced batched launches.
+    tier = model.query_tier
+    handles = [tier.submit(probes + 0.01 * i) for i in range(3)]
+    tier.drain()
+    st = model.stats()                  # the typed ServiceStats contract
+    print(f"query tier: {st.counters.queries_served} served in "
+          f"{st.counters.query_launches} launches "
+          f"({st.counters.coalesced_requests} coalesced), "
+          f"p.version={handles[-1].result.version}")
 
     if cfg.backend in ("stream", "dist"):
         # Streaming extras: timestamped writes, TTL eviction, and a

@@ -19,10 +19,21 @@ from repro.core.ddc import (
 from repro.ddc.api import DDC, SNAPSHOT_FORMAT, SnapshotError
 from repro.ddc.backends import BACKENDS, Backend, register_backend
 from repro.ddc.config import ConfigError, DDCConfig
+from repro.serve.query_tier import (
+    QueryResult,
+    QueryTier,
+    QueueFull,
+    ServiceCounters,
+    ServiceGauges,
+    ServiceStats,
+    Snapshot,
+)
 
 __all__ = [
     "DDC", "DDCConfig", "ConfigError", "SNAPSHOT_FORMAT", "SnapshotError",
     "BACKENDS", "Backend", "register_backend",
     "ClusterSet", "CommMeter", "ddc_host", "make_ddc_fn",
     "same_clustering",
+    "QueryResult", "QueryTier", "QueueFull", "Snapshot",
+    "ServiceStats", "ServiceCounters", "ServiceGauges",
 ]

@@ -103,13 +103,36 @@ class DDC:
         labels = self.labels_
         return len(set(labels[labels >= 0].tolist()))
 
-    def query(self, points: np.ndarray) -> np.ndarray:
+    def query(self, points: np.ndarray, legacy: bool = False):
         """Global cluster id per query point: nearest clustered fitted
-        point within ``eps`` (DBSCAN's border rule), else -1."""
-        return self.backend.query(points)
+        point within ``eps`` (DBSCAN's border rule), else -1.
+
+        Returns a ``repro.serve.QueryResult``: the labels plus the
+        snapshot ``version`` that answered, the ``degraded`` flag, the
+        routed ``scanned_shards``, and per-request latency.  The result
+        duck-types as its labels ndarray (``np.asarray``, comparisons,
+        indexing all work), so pre-redesign callers run unchanged;
+        ``legacy=True`` returns the bare ndarray outright."""
+        return self.backend.query(points, legacy=legacy)
+
+    @property
+    def query_tier(self):
+        """The pipelined high-QPS read loop (DESIGN.md §12): bounded
+        ``submit``/``drain`` queue, per-request deadlines, coalesced
+        batched launches, snapshot-staleness policy from the config's
+        ``max_staleness``."""
+        return self.backend.query_tier
+
+    def stats(self):
+        """The typed ``repro.serve.ServiceStats`` contract: monotonic
+        counters vs point-in-time gauges vs comm accounting, identical
+        across all four backends.  ``stats().as_dict()`` /
+        ``stats().comm_dict()`` are the legacy dict views."""
+        return self.backend.service_stats()
 
     def comm_stats(self) -> dict:
-        """Exact trace-time wire accounting for the chosen backend."""
+        """Exact trace-time wire accounting for the chosen backend
+        (legacy flat dict view; see ``stats()`` for the typed form)."""
         return self.backend.comm_stats()
 
     # -- snapshot / restore ------------------------------------------------

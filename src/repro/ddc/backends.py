@@ -32,6 +32,7 @@ state incrementally and support TTL eviction (``expire``).
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, List, Optional, Type
 
 import numpy as np
@@ -108,7 +109,53 @@ class Backend:
     def points(self) -> np.ndarray:
         raise NotImplementedError
 
-    def query(self, points: np.ndarray) -> np.ndarray:
+    def query(self, points: np.ndarray, legacy: bool = False):
+        """Label query points against the fitted clustering.  Returns a
+        ``repro.serve.QueryResult`` (labels + snapshot version +
+        degraded flag + routing + latency) that duck-types as the bare
+        labels array; ``legacy=True`` returns the ndarray outright."""
+        raise NotImplementedError
+
+    # snapshot-versioned read path (DESIGN.md §12)
+    def snapshot(self):
+        """The last published immutable read view, or None."""
+        raise NotImplementedError
+
+    def read_snapshot(self):
+        """Freshness-seeking read view: fold pending writes, then return
+        the published snapshot (None for an empty model)."""
+        raise NotImplementedError
+
+    @property
+    def quarantined(self) -> dict:
+        """shard -> reason for currently quarantined shards ({} for the
+        batch backends: they have no failure model)."""
+        return {}
+
+    @property
+    def query_tier(self):
+        """The backend's ``QueryTier``: the pipelined, coalescing,
+        snapshot-serving read loop (built lazily from the config's
+        queue_depth / query_bucket_min / max_staleness knobs)."""
+        from repro.serve import query_tier as qt
+
+        if getattr(self, "_tier", None) is None:
+            self._tier = qt.QueryTier(
+                self._tier_source(),
+                max_queries=self.cfg.max_queries,
+                queue_depth=self.cfg.queue_depth,
+                bucket_min=self.cfg.query_bucket_min,
+                max_staleness=self.cfg.max_staleness)
+        return self._tier
+
+    def _tier_source(self):
+        """The snapshot source the tier reads (the backend itself for
+        batch backends; the serve engine for stream/dist)."""
+        return self
+
+    def service_stats(self):
+        """The typed ``ServiceStats`` contract (counters vs gauges),
+        surfaced identically by every backend (DESIGN.md §12)."""
         raise NotImplementedError
 
     def comm_stats(self) -> dict:
@@ -132,12 +179,16 @@ class _BufferedBatchBackend(Backend):
         self._shard_pts: List[np.ndarray] = [
             np.zeros((0, 2), np.float32) for _ in range(cfg.shards)]
         self._labels: Optional[np.ndarray] = None
+        self._snapshot = None
+        self._snapshot_version = 0
+        self.refits = 0           # monotonic: full-pipeline recomputes
 
     def fit(self, points: np.ndarray, t: float | None = None) -> None:
         pts = np.asarray(points, np.float32).reshape(-1, 2)
         parts = np.array_split(np.arange(len(pts)), self.cfg.shards)
         self._shard_pts = [pts[idx] for idx in parts]
         self._labels = None
+        self._snapshot = None
 
     def partial_fit(self, shard, batch, t=None) -> None:
         if not 0 <= shard < self.cfg.shards:
@@ -145,6 +196,7 @@ class _BufferedBatchBackend(Backend):
         batch = np.asarray(batch, np.float32).reshape(-1, 2)
         self._shard_pts[shard] = np.concatenate([self._shard_pts[shard], batch])
         self._labels = None
+        self._snapshot = None
 
     def points(self) -> np.ndarray:
         return (np.concatenate(self._shard_pts) if any(len(p) for p in self._shard_pts)
@@ -160,11 +212,108 @@ class _BufferedBatchBackend(Backend):
     def labels(self) -> np.ndarray:
         if self._labels is None:
             self._labels = self._refit()
+            self.refits += 1
         return self._labels
 
-    def query(self, points: np.ndarray) -> np.ndarray:
-        q = np.asarray(points, np.float32).reshape(-1, 2)
-        return _query_nearest(q, self.points(), self.labels(), self.cfg.eps)
+    def query(self, points: np.ndarray, legacy: bool = False):
+        """Label queries via the published-snapshot path (the DESIGN.md
+        §12 fix for the silent full-pipeline recompute per call): the
+        first read after a write refits ONCE and publishes a snapshot;
+        every further query is answered from it — O(points), one bounded
+        batched kernel, no recompute (the ``refits`` counter proves it).
+        """
+        res = self.query_tier.query(points)
+        return res.labels if legacy else res
+
+    # -- snapshot publish (the batch edition of the serve engines') --------
+
+    def snapshot(self):
+        # A write since the last publish invalidates (fit/partial_fit
+        # set _snapshot = None), so a held snapshot is never torn.
+        return self._snapshot
+
+    def read_snapshot(self):
+        if not any(len(p) for p in self._shard_pts):
+            return None
+        if self._snapshot is None:
+            self._publish_snapshot()
+        return self._snapshot
+
+    def _publish_snapshot(self):
+        """Cut an immutable read view from the buffered shard points +
+        (lazily recomputed) labels: pow2-padded (K, cap) buffers, global
+        labels per slot, per-shard live bboxes — the same layout the
+        serve engines publish, so one QueryTier serves all four
+        backends bit-identically."""
+        import jax.numpy as jnp
+
+        from repro.serve import query_tier as qt
+
+        labels = self.labels()          # refits at most once per write
+        k = self.cfg.shards
+        lens = [len(p) for p in self._shard_pts]
+        cap = max(16, 1 << (max(lens) - 1).bit_length())
+        pts = np.zeros((k, cap, 2), np.float32)
+        mask = np.zeros((k, cap), bool)
+        glab = np.full((k, cap), -1, np.int32)
+        bboxes = []
+        base = 0
+        for s, p in enumerate(self._shard_pts):
+            pts[s, :len(p)] = p
+            mask[s, :len(p)] = True
+            glab[s, :len(p)] = labels[base:base + len(p)]
+            base += len(p)
+            bboxes.append(
+                (float(p[:, 0].min()), float(p[:, 1].min()),
+                 float(p[:, 0].max()), float(p[:, 1].max()))
+                if len(p) else None)
+        self._snapshot_version += 1
+        self._snapshot = qt.Snapshot(
+            version=self._snapshot_version,
+            epoch=self.refits,
+            published_at=time.monotonic(),
+            eps=float(self.cfg.eps),
+            pts=jnp.asarray(pts), mask=jnp.asarray(mask),
+            glabels=jnp.asarray(glab),
+            bboxes=tuple(bboxes),
+            quarantined=frozenset(),
+            n_live=sum(lens),
+            n_clusters=len(set(labels[labels >= 0].tolist())),
+        )
+        return self._snapshot
+
+    def service_stats(self):
+        from repro.serve import query_tier as qt
+
+        tier = getattr(self, "_tier", None)
+        tc = tier.counters() if tier is not None else {}
+        labels = self.labels() if any(len(p) for p in self._shard_pts) \
+            else np.zeros((0,), np.int32)
+        counters = qt.ServiceCounters(
+            refreshes=self.refits,
+            refits=self.refits,
+            snapshots_published=self._snapshot_version,
+            queries_served=tc.get("queries_served", 0),
+            query_launches=tc.get("query_launches", 0),
+            coalesced_requests=tc.get("coalesced_requests", 0),
+            query_rows=tc.get("query_rows", 0),
+            deadline_misses=tc.get("deadline_misses", 0),
+            degraded_queries=tc.get("degraded_queries", 0),
+        )
+        gauges = qt.ServiceGauges(
+            shards=self.cfg.shards,
+            capacity=int(self._snapshot.pts.shape[1])
+            if self._snapshot is not None else 0,
+            n_live=sum(len(p) for p in self._shard_pts),
+            n_clusters=len(set(labels[labels >= 0].tolist())),
+            snapshot_version=self._snapshot_version,
+            snapshot_epoch=self._snapshot.epoch
+            if self._snapshot is not None else 0,
+            queue_pending=tier.pending if tier is not None else 0,
+            jit_cache_entries=qt.snapshot_query_cache_entries(),
+        )
+        return qt.ServiceStats(backend=self.name, counters=counters,
+                               gauges=gauges, comm=self.meter.snapshot())
 
     def _refit(self) -> np.ndarray:
         raise NotImplementedError
@@ -182,6 +331,7 @@ class _BufferedBatchBackend(Backend):
         self._shard_pts = [np.asarray(arrays[f"shard_{s}"], np.float32)
                            for s in range(int(manifest["n_shards"]))]
         self._labels = np.asarray(arrays["labels"], np.int32)
+        self._snapshot = None
 
 
 @register_backend("host")
@@ -368,13 +518,40 @@ class StreamBackend(Backend):
         _, parts, _ = self.service.live()
         return parts
 
-    def query(self, points: np.ndarray) -> np.ndarray:
-        return self.service.query(points)
+    def query(self, points: np.ndarray, legacy: bool = False):
+        return self.service.query(points, legacy=legacy)
+
+    # -- snapshot-versioned reads (delegate to the serve engine) -----------
+
+    def snapshot(self):
+        return self._svc.snapshot() if self._svc is not None else None
+
+    def read_snapshot(self):
+        if self._svc is None and self.cfg.capacity is None:
+            return None          # nothing fitted, nothing to publish
+        return self.service.read_snapshot()
+
+    @property
+    def quarantined(self) -> dict:
+        return self._svc.quarantined if self._svc is not None else {}
+
+    def service_stats(self):
+        from repro.serve import query_tier as qt
+
+        tier = getattr(self, "_tier", None)
+        if self._svc is None:
+            return qt.ServiceStats(
+                backend=self.name, counters=qt.ServiceCounters(),
+                gauges=qt.ServiceGauges(shards=self.cfg.shards),
+                comm=self.meter.snapshot())
+        return self.service.service_stats(tier=tier)
 
     def comm_stats(self) -> dict:
-        stats = dict(self.service.stats()) if self._svc is not None else {}
-        stats.pop("comm", None)   # flattened below — don't nest a duplicate
-        return {"backend": self.name} | stats | self.meter.snapshot()
+        # Derived from the typed contract so the dict view can't drift;
+        # same flat shape as ever (backend tag + service stats + meter).
+        if self._svc is None:
+            return {"backend": self.name} | self.meter.snapshot()
+        return self.service_stats().comm_dict()
 
     def state(self) -> tuple[dict, dict]:
         return self.service.state_dict()

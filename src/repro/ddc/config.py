@@ -66,6 +66,13 @@ class DDCConfig:
     retry_backoff: float = 0.0       # seconds; doubles per retry round
     journal_limit: int = 1024        # per-shard WAL entries before compaction
 
+    # Query-tier knobs (DESIGN.md §12; all backends).
+    queue_depth: int = 64            # bounded request queue (backpressure)
+    query_bucket_min: int = 16       # smallest pow2 query-width bucket
+    max_staleness: Optional[float] = None   # seconds a snapshot may serve;
+    #                                  None: always fresh (refresh-on-read),
+    #                                  inf: never refresh (pure snapshot reads)
+
     _CORE_FIELDS = ("eps", "min_pts", "bounds", "grid", "max_clusters",
                     "max_verts", "merge_eps", "local_algo", "kmeans_k",
                     "schedule", "tree_degree", "merge_refine",
@@ -185,6 +192,22 @@ class DDCConfig:
         if self.journal_limit < 1:
             raise ConfigError(
                 f"journal_limit must be >= 1, got {self.journal_limit}")
+        if self.queue_depth < 1:
+            raise ConfigError(
+                f"queue_depth must be >= 1, got {self.queue_depth}")
+        if self.query_bucket_min < 1 \
+                or self.query_bucket_min > self.max_queries:
+            raise ConfigError(
+                f"query_bucket_min must be in [1, max_queries="
+                f"{self.max_queries}], got {self.query_bucket_min}")
+        if self.query_bucket_min & (self.query_bucket_min - 1):
+            raise ConfigError(
+                f"query_bucket_min must be a power of two (it is the "
+                f"smallest jit shape bucket), got {self.query_bucket_min}")
+        if self.max_staleness is not None and self.max_staleness < 0:
+            raise ConfigError(
+                f"max_staleness must be >= 0 (or None for always-fresh), "
+                f"got {self.max_staleness}")
 
     def _check_sizing(self, sample: np.ndarray) -> None:
         labels = dbscan_mod.dbscan_ref(sample, self.eps, self.min_pts)

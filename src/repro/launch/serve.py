@@ -13,13 +13,20 @@ Two modes behind one entry point:
   ingest/query latency, delta-path comm volume, and query-routing
   counters.
 
+  ``--qps-requests N`` appends the pipelined high-QPS request loop
+  (DESIGN.md §12): N requests flow through the bounded ``QueryTier``
+  queue — coalesced into batched snapshot reads — while the tail of the
+  ingest stream keeps writing and republishing under them, so the
+  printed p50/p99/QPS measures decoupled snapshot serving, not
+  refresh-blocked reads.
+
 CPU-scale examples:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --tiny \
       --requests 4 --prompt-len 32 --gen 16
   PYTHONPATH=src python -m repro.launch.serve --mode ddc --layout rings \
       --shards 8 --queries 512
   PYTHONPATH=src python -m repro.launch.serve --mode ddc --backend dist \
-      --shards 8
+      --shards 8 --qps-requests 64 --deadline-ms 50
 """
 from __future__ import annotations
 
@@ -78,6 +85,21 @@ def main(argv=None):
                          "engine (chaos drill; DESIGN.md §11)")
     ap.add_argument("--faults", type=int, default=3,
                     help="number of injected fault events (--fault-seed)")
+    # DDC high-QPS request loop (DESIGN.md §12)
+    ap.add_argument("--qps-requests", type=int, default=0,
+                    help="run N requests through the pipelined QueryTier "
+                         "loop, interleaved with ingest (0: skip)")
+    ap.add_argument("--request-points", type=int, default=32,
+                    help="query points per pipelined request")
+    ap.add_argument("--queue-depth", type=int, default=64,
+                    help="bounded request-queue depth (backpressure)")
+    ap.add_argument("--max-staleness", default="inf",
+                    help="seconds a published snapshot may keep serving "
+                         "('inf': never refresh mid-loop, 'none': fold "
+                         "pending writes before every drain)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request deadline; misses are counted (and "
+                         "still answered) (0: no deadline)")
     args = ap.parse_args(argv)
     if args.mode == "ddc":
         return serve_ddc(args)
@@ -94,11 +116,14 @@ def serve_ddc(args):
     spec = spatial.PHASE2_LAYOUTS[args.layout]
     pts = spec["make"](args.n)
     cap = spatial.shard_capacity(args.n, args.shards)
+    staleness = None if str(args.max_staleness).lower() == "none" \
+        else float(args.max_staleness)
     cfg = DDCConfig(
         eps=spec["eps"], min_pts=spec["min_pts"], grid=spec["grid"],
         max_clusters=spec["max_clusters"], max_verts=spec["max_verts"],
         backend=args.backend, shards=args.shards, capacity=cap,
         max_batch=min(args.batch, cap), max_queries=args.queries,
+        queue_depth=args.queue_depth, max_staleness=staleness,
     ).validate()
     meter = CommMeter()
     plan = None
@@ -107,10 +132,17 @@ def serve_ddc(args):
             seed=args.fault_seed, shards=args.shards, n_faults=args.faults)
     model = DDC(cfg, meter=meter, faults=plan)
 
+    # With a request loop armed, hold back the stream's tail so writes
+    # keep landing (and republishing snapshots) UNDER the readers.
+    batches = list(spatial.stream_batches(pts, args.shards, cfg.max_batch))
+    n_held = 0
+    if args.qps_requests > 0:
+        n_held = min(len(batches) - 1, max(args.shards, 2))
+    head, held = batches[:len(batches) - n_held], batches[len(batches) - n_held:]
+
     t0 = time.time()
     n_batches = 0
-    for shard, chunk in spatial.stream_batches(pts, args.shards,
-                                               cfg.max_batch):
+    for shard, chunk in head:
         model.partial_fit(shard, chunk)
         model.service.refresh()
         n_batches += 1
@@ -130,6 +162,10 @@ def serve_ddc(args):
     labels = model.query(q)
     query_s = time.time() - t0
 
+    qps_out = {}
+    if args.qps_requests > 0:
+        qps_out = _request_loop(model, held, args, rng)
+
     stats = model.service.stats()
     out = model.comm_stats() | {
         "mode": "ddc",
@@ -138,6 +174,7 @@ def serve_ddc(args):
         "ingest_ms_per_batch": round(ingest_s / max(n_batches, 1) * 1e3, 2),
         "query_ms": round(query_s * 1e3, 2),
         "query_clustered_frac": round(float(np.mean(labels >= 0)), 3),
+        "query_version": labels.version,
         "refreshes": stats["refreshes"],
         "retries": stats["retries"],
         "quarantined_shards": stats["quarantined_shards"],
@@ -145,12 +182,66 @@ def serve_ddc(args):
         "fenced_deltas": stats["fenced_deltas"],
         "degraded_queries": stats["degraded_queries"],
         "journal_entries": stats["journal_entries"],
-    }
+    } | qps_out
     if args.fault_seed is not None:
         out["fault_seed"] = args.fault_seed
         out["recovered_shards"] = recovered
     print(json.dumps(out))
     return out
+
+
+def _request_loop(model, writes, args, rng):
+    """The pipelined high-QPS loop (DESIGN.md §12): requests enter the
+    bounded ``QueryTier`` queue with per-request deadlines and are
+    answered in coalesced batched launches from the last published
+    snapshot, while held-back ingest batches keep writing (and
+    republishing new versions) underneath."""
+    from repro.serve import QueueFull
+
+    tier = model.query_tier
+    writes = list(writes)
+    deadline_s = args.deadline_ms / 1e3 if args.deadline_ms > 0 else None
+
+    def one_request():
+        return rng.uniform(0, 1, (args.request_points, 2)).astype(np.float32)
+
+    tier.query(one_request())   # compile the bucketed kernel up front
+    pending = []
+    t0 = time.time()
+    for r in range(args.qps_requests):
+        cutoff = (time.monotonic() + deadline_s) if deadline_s else None
+        try:
+            pending.append(tier.submit(one_request(), deadline=cutoff))
+        except QueueFull:
+            tier.drain()
+            pending.append(tier.submit(one_request(), deadline=cutoff))
+        if writes and r % 4 == 1:
+            # A write + republish lands under the readers: the next
+            # drain serves the new version, never a torn intermediate.
+            shard, chunk = writes.pop(0)
+            model.partial_fit(shard, chunk)
+            model.service.refresh()
+        if r % 8 == 7:
+            tier.drain()
+    for shard, chunk in writes:   # drain any leftover held-back ingest
+        model.partial_fit(shard, chunk)
+        model.service.refresh()
+    tier.drain()
+    wall = time.time() - t0
+
+    lat = np.array([p.result.latency_ms for p in pending])
+    c = tier.counters()
+    return {
+        "qps_requests": len(pending),
+        "qps": round(len(pending) / wall, 1),
+        "p50_ms": round(float(np.percentile(lat, 50)), 3),
+        "p99_ms": round(float(np.percentile(lat, 99)), 3),
+        "versions_served": len({p.result.version for p in pending}),
+        "query_launches": c["query_launches"],
+        "coalesced_requests": c["coalesced_requests"],
+        "deadline_misses": c["deadline_misses"],
+        "queue_depth": tier.queue_depth,
+    }
 
 
 def serve_lm(args):

@@ -4,6 +4,10 @@ plane + host-driven data plane; dist_service.py: the same control plane
 over a device-resident shard_map data plane).  faults.py / journal.py
 are the failure model riding both (DESIGN.md §11): seeded fault
 injection, the delta validation gate, and the write-ahead recovery log.
+query_tier.py is the high-QPS read path riding on top (DESIGN.md §12):
+immutable versioned snapshots published at refresh, coalesced batched
+queries with pow2 shape bucketing, and the QueryResult/ServiceStats
+API contract.
 
 The cluster-service re-exports are lazy (PEP 562) so importing the LM
 engine does not drag in the whole clustering stack, and vice versa.
@@ -11,6 +15,9 @@ engine does not drag in the whole clustering stack, and vice versa.
 
 _CLUSTER_EXPORTS = ("ClusterService", "ShardControlPlane", "StreamConfig")
 _DIST_EXPORTS = ("DistClusterService",)
+_QUERY_TIER_EXPORTS = ("QueryResult", "QueryTier", "QueueFull", "Snapshot",
+                       "ServiceStats", "ServiceCounters", "ServiceGauges",
+                       "route_snapshot")
 _FAULT_EXPORTS = ("FAULT_KINDS", "FaultEvent", "FaultPlan", "FaultError",
                   "DeltaDropped", "LaneKilled", "DeltaValidationError",
                   "RecoveryError")
@@ -24,6 +31,9 @@ def __getattr__(name):
     if name in _DIST_EXPORTS:
         from repro.serve import dist_service
         return getattr(dist_service, name)
+    if name in _QUERY_TIER_EXPORTS:
+        from repro.serve import query_tier
+        return getattr(query_tier, name)
     if name in _FAULT_EXPORTS:
         from repro.serve import faults
         return getattr(faults, name)

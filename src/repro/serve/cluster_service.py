@@ -85,6 +85,7 @@ import numpy as np
 from repro.core import ddc
 from repro.serve import faults as faults_mod
 from repro.serve import journal as journal_mod
+from repro.serve import query_tier as qt
 
 
 @dataclasses.dataclass(frozen=True)
@@ -204,11 +205,14 @@ class ShardControlPlane:
 
     Subclasses supply the data plane: ``_append_chunk`` (write one padded
     chunk into a shard's device buffer), ``_kill_device`` (clear live
-    bits on device), and ``_invalidate_reads``.  Everything else
+    bits on device), ``_read_view`` (donation-safe copies for snapshot
+    publish), and ``_invalidate_reads``.  Everything else
     — slot choice, eviction victim selection, TTL stamps, bbox mirrors,
-    dirty tracking, shard-range validation — is shared host logic that
-    never syncs with the device.
+    dirty tracking, shard-range validation, snapshot publish/swap — is
+    shared host logic that never syncs with the device on the write path.
     """
+
+    flavor = "base"                 # backend tag ("stream" / "dist")
 
     def __init__(self, scfg: StreamConfig, meter: ddc.CommMeter | None = None,
                  faults: faults_mod.FaultPlan | None = None):
@@ -271,6 +275,12 @@ class ShardControlPlane:
         self.degraded_queries = 0       # queries routed around quarantine
         self.last_query_degraded = False
         self._route_degraded = False
+        # Snapshot publish/swap (DESIGN.md §12): the last published read
+        # view and its monotonic version counter.  Cut eagerly at the end
+        # of every refresh (and on restore), NEVER invalidated by
+        # ingest/evict — a held snapshot is stale but consistent.
+        self._snapshot: Optional[qt.Snapshot] = None
+        self._snapshot_version = 0
 
     # -- data-plane hooks ---------------------------------------------------
 
@@ -682,6 +692,152 @@ class ShardControlPlane:
     def refresh(self, mode: str | None = None, force: bool = False):
         raise NotImplementedError
 
+    # -- snapshot publish/swap (DESIGN.md §12) ------------------------------
+
+    def _read_view(self):
+        """Data-plane hook for snapshot publish: (pts (K, cap, 2), mask
+        (K, cap), glabels (K, cap)) device arrays that are safe to hold
+        indefinitely — copies of (never aliases into) the donated ring
+        buffers."""
+        raise NotImplementedError
+
+    def _publish_snapshot(self) -> "qt.Snapshot":
+        """Cut and swap in a new immutable read view of the CURRENT
+        engine state.  Called at the end of every refresh (and restore),
+        so every published version corresponds to one consistent
+        (buffers, labels, bboxes, quarantine) observation — a concurrent
+        reader sees version V in full or V+1 in full, never a mix."""
+        pts, mask, glab = self._read_view()
+        k = self.scfg.shards
+        self._snapshot_version += 1
+        self._snapshot = qt.Snapshot(
+            version=self._snapshot_version,
+            epoch=self.refreshes,
+            published_at=time.monotonic(),
+            eps=float(self.cfg.eps),
+            pts=pts, mask=mask, glabels=glab,
+            bboxes=tuple(self.shard_bbox(s) for s in range(k)),
+            quarantined=frozenset(self._quarantined),
+            n_live=self.n_live(),
+            n_clusters=int(np.asarray(self._global.valid).sum())
+            if self._global is not None else 0,
+        )
+        return self._snapshot
+
+    def snapshot(self) -> Optional["qt.Snapshot"]:
+        """The last published read view (None before the first refresh)."""
+        return self._snapshot
+
+    def read_snapshot(self) -> Optional["qt.Snapshot"]:
+        """Freshness-seeking read view: fold pending writes (refresh if
+        dirty), then return the published snapshot.  None only for the
+        empty-service short-circuit (nothing ingested, nothing merged)."""
+        if self._global is None and self.n_live() == 0:
+            return None
+        if self._dirty or self._global is None:
+            self.refresh()
+        if self._snapshot is None:
+            self._publish_snapshot()
+        return self._snapshot
+
+    # -- unified read path (both data planes) -------------------------------
+
+    def _query_sync(self, q: np.ndarray):
+        """Engine hook: label ``q`` against the current refreshed state.
+        Returns (labels (n,) int32, degraded, scanned-shard set)."""
+        raise NotImplementedError
+
+    def query(self, points: np.ndarray, return_stale: bool = False,
+              legacy: bool = False):
+        """Global cluster id for each query point: the label of the
+        nearest clustered live point within ``eps`` (DBSCAN's border
+        rule against the frozen clustering), else -1.
+
+        Returns a ``QueryResult`` — labels plus the snapshot ``version``
+        that answered, the ``degraded`` flag (a quarantined shard could
+        have mattered), the routed ``scanned_shards``, and latency.  The
+        result duck-types as its labels array, and ``legacy=True`` returns
+        the bare ndarray outright (deprecation shim for pre-redesign
+        callers); ``return_stale=True`` keeps the old ``(labels, stale)``
+        tuple shape with a ``QueryResult`` in the first slot.
+
+        Each chunk is routed to the shards whose ε-dilated bbox could
+        contain a neighbour (``_route``); a chunk that reaches no shard
+        short-circuits to noise without running a kernel, and a service
+        with no live points and no global state yet short-circuits
+        entirely (version 0).  Quarantined shards are routed around, so
+        healthy shards keep answering during a fault — surfaced via
+        ``QueryResult.degraded`` (and the legacy ``last_query_degraded``
+        flag + ``degraded_queries`` counter).
+        """
+        t0 = time.monotonic()
+        q = np.asarray(points, np.float32).reshape(-1, 2)
+        self.last_query_degraded = False
+        if self._global is None and self.n_live() == 0:
+            res = qt.QueryResult(
+                np.full((len(q),), -1, np.int32), version=0,
+                latency_ms=(time.monotonic() - t0) * 1e3)
+            return self._query_return(res, return_stale, legacy)
+        if self._dirty or self._global is None:
+            self.refresh()
+        out, degraded, scanned = self._query_sync(q)
+        self.last_query_degraded = degraded
+        if degraded:
+            self.degraded_queries += 1
+        res = qt.QueryResult(
+            out, version=self._snapshot_version, degraded=degraded,
+            scanned_shards=tuple(sorted(scanned)),
+            latency_ms=(time.monotonic() - t0) * 1e3)
+        return self._query_return(res, return_stale, legacy)
+
+    @staticmethod
+    def _query_return(res: "qt.QueryResult", return_stale: bool,
+                      legacy: bool):
+        out = res.labels if legacy else res
+        return (out, res.degraded) if return_stale else out
+
+    def service_stats(self, tier: "qt.QueryTier | None" = None
+                      ) -> "qt.ServiceStats":
+        """The typed stats contract (DESIGN.md §12): monotonic counters,
+        point-in-time gauges, and the comm meter snapshot.  ``tier``
+        folds a ``QueryTier``'s serving counters in; the legacy
+        ``stats()`` dict is derived from this via ``as_dict()``."""
+        tc = tier.counters() if tier is not None else {}
+        counters = qt.ServiceCounters(
+            refreshes=self.refreshes,
+            delta_refreshes=self.delta_refreshes,
+            snapshots_published=self._snapshot_version,
+            query_chunks=self.query_chunks,
+            query_shards_scanned=self.query_shards_scanned,
+            queries_served=tc.get("queries_served", 0),
+            query_launches=tc.get("query_launches", 0),
+            coalesced_requests=tc.get("coalesced_requests", 0),
+            query_rows=tc.get("query_rows", 0),
+            deadline_misses=tc.get("deadline_misses", 0),
+            degraded_queries=self.degraded_queries
+            + tc.get("degraded_queries", 0),
+            retries=self.retries,
+            quarantine_events=self.quarantine_events,
+            fenced_deltas=self.fenced_deltas,
+            journal_entries=self._journal.entries_total,
+        )
+        gauges = qt.ServiceGauges(
+            shards=self.scfg.shards,
+            capacity=self.scfg.capacity,
+            n_live=self.n_live(),
+            n_clusters=int(np.asarray(self._global.valid).sum())
+            if self._global is not None else 0,
+            snapshot_version=self._snapshot_version,
+            snapshot_epoch=self._snapshot.epoch
+            if self._snapshot is not None else 0,
+            quarantined_now=tuple(sorted(self._quarantined)),
+            queue_pending=tier.pending if tier is not None else 0,
+            jit_cache_entries=qt.snapshot_query_cache_entries(),
+        )
+        comm = self.meter.snapshot() if self.meter is not None else {}
+        return qt.ServiceStats(backend=self.flavor, counters=counters,
+                               gauges=gauges, comm=comm)
+
     def remerge_full(self):
         """Recompute the global state from scratch (the baseline the
         delta path is measured against).  Exactness contract: the result
@@ -740,6 +896,7 @@ class ShardControlPlane:
             "fenced_deltas": self.fenced_deltas,
             "degraded_queries": self.degraded_queries,
             "journal_entries": self._journal.entries_total,
+            "snapshot_version": self._snapshot_version,
         }
 
     def _restore_mirrors(self, arrays: dict, manifest: dict) -> None:
@@ -775,6 +932,9 @@ class ShardControlPlane:
         self.quarantine_events = int(manifest.get("quarantine_events", 0))
         self.fenced_deltas = int(manifest.get("fenced_deltas", 0))
         self.degraded_queries = int(manifest.get("degraded_queries", 0))
+        # Version monotonicity survives save/load: the restore publish
+        # continues from the saved counter, never rewinds it.
+        self._snapshot_version = int(manifest.get("snapshot_version", 0))
         self._journal.entries_total = int(manifest.get("journal_entries", 0))
         for s in range(k):
             self._journal.compact(s, self._hpts[s], self._live[s],
@@ -851,27 +1011,9 @@ class ShardControlPlane:
         }
 
     def stats(self) -> dict:
-        out = {
-            "shards": self.scfg.shards,
-            "capacity": self.scfg.capacity,
-            "n_live": self.n_live(),
-            "refreshes": self.refreshes,
-            "delta_refreshes": self.delta_refreshes,
-            "n_clusters": int(np.asarray(self._global.valid).sum())
-            if self._global is not None else 0,
-            # Failure-model counters (monotonic) + the current
-            # quarantine set, so degraded operation is observable
-            # without log scraping.
-            "retries": self.retries,
-            "quarantined_shards": self.quarantine_events,
-            "quarantined_now": sorted(self._quarantined),
-            "fenced_deltas": self.fenced_deltas,
-            "degraded_queries": self.degraded_queries,
-            "journal_entries": self._journal.entries_total,
-        } | self.routing_stats()
-        if self.meter is not None:
-            out["comm"] = self.meter.snapshot()
-        return out
+        """Legacy dict view, now DERIVED from the typed ``ServiceStats``
+        (``service_stats().as_dict()``) so the two can never drift."""
+        return self.service_stats().as_dict()
 
 
 # ---------------------------------------------------------------------------
@@ -891,6 +1033,8 @@ class ClusterService(ShardControlPlane):
     All device state is static-shape, so every kernel compiles once per
     (StreamConfig) and is reused for the lifetime of the service.
     """
+
+    flavor = "stream"
 
     def __init__(self, scfg: StreamConfig, meter: ddc.CommMeter | None = None,
                  faults: faults_mod.FaultPlan | None = None):
@@ -953,38 +1097,21 @@ class ClusterService(ShardControlPlane):
             self._dense, jnp.stack(self._mask), self._maps)
         self._dirty -= set(staged)
         self.refreshes += 1
+        self._publish_snapshot()
         return self._global
 
     # -- read path ---------------------------------------------------------
 
-    def query(self, points: np.ndarray, return_stale: bool = False):
-        """Global cluster id for each query point: the label of the
-        nearest clustered live point within ``eps`` (DBSCAN's border
-        rule against the frozen clustering), else -1.
+    def _read_view(self):
+        # jnp.stack materialises fresh device arrays (copies), so the
+        # snapshot survives the donated in-place ring updates; _glabels
+        # is never donated, holding the reference is safe.
+        return jnp.stack(self._pts), jnp.stack(self._mask), self._glabels
 
-        Each chunk is routed to the shards whose ε-dilated bbox could
-        contain a neighbour (``_route``); a chunk that reaches no shard
-        short-circuits to noise without running a kernel.  A service with
-        no live points and no global state yet (fresh, or fully evicted
-        before any refresh) short-circuits to all-noise without compiling
-        or running the merge pipeline.
-
-        Quarantined shards are routed around, so healthy shards keep
-        answering during a fault; when a quarantined shard could have
-        mattered for this call, the answer is *stale* — surfaced via
-        ``return_stale=True`` (returns ``(labels, stale)``), the
-        ``last_query_degraded`` flag, and the ``degraded_queries``
-        counter.
-        """
-        q = np.asarray(points, np.float32).reshape(-1, 2)
-        self.last_query_degraded = False
-        if self._global is None and self.n_live() == 0:
-            out = np.full((len(q),), -1, np.int32)
-            return (out, False) if return_stale else out
-        if self._dirty or self._global is None:
-            self.refresh()
+    def _query_sync(self, q: np.ndarray):
         qmax = self.scfg.max_queries
         degraded = False
+        scanned: set = set()
         out = np.empty((len(q),), np.int32)
         for off in range(0, len(q), qmax):
             chunk = q[off:off + qmax]
@@ -992,6 +1119,7 @@ class ClusterService(ShardControlPlane):
             scan = self._route(chunk)
             degraded |= self._route_degraded
             sel = np.nonzero(scan)[0]
+            scanned.update(int(s) for s in sel)
             if len(sel) == 0:
                 out[off:off + nq] = -1
                 continue
@@ -1002,10 +1130,7 @@ class ClusterService(ShardControlPlane):
             lab = _query_labels(jnp.asarray(chunk), nq, pts, mask, glab,
                                 self.cfg.eps)
             out[off:off + nq] = np.asarray(lab)[:nq]
-        self.last_query_degraded = degraded
-        if degraded:
-            self.degraded_queries += 1
-        return (out, degraded) if return_stale else out
+        return out, degraded, scanned
 
     def _scan_stack(self, sel: np.ndarray):
         """Stack the scanned shards' buffers, padded to a power-of-two
@@ -1079,4 +1204,7 @@ class ClusterService(ShardControlPlane):
                 svc._batch, svc._pair_d2, svc.cfg, svc._exclude_mask())
             svc._glabels = _global_labels(
                 svc._dense, jnp.stack(svc._mask), svc._maps)
+            # Restore ends with an eager publish, like refresh does: the
+            # version counter continues past the saved one (monotonic).
+            svc._publish_snapshot()
         return svc

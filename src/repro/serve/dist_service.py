@@ -173,6 +173,8 @@ class DistClusterService(ShardControlPlane):
     and that the delta-ClusterSet exchange bytes are real transfers.
     """
 
+    flavor = "dist"
+
     def __init__(self, scfg: StreamConfig, meter: ddc.CommMeter | None = None,
                  faults: faults_mod.FaultPlan | None = None):
         super().__init__(scfg, meter, faults=faults)
@@ -350,35 +352,35 @@ class DistClusterService(ShardControlPlane):
         self._glabels = self._fns["labels"](self._dense, self._mask, maps_dev)
         self._dirty -= set(staged)
         self.refreshes += 1
+        self._publish_snapshot()
         return self._global
 
     # -- read path ----------------------------------------------------------
 
-    def query(self, points: np.ndarray, return_stale: bool = False):
-        """Global cluster id per query point (nearest clustered live
-        point within ``eps``, else -1), computed lane-local on the
-        bbox-routed candidate shards and folded on the host in ascending
-        shard order (ties match the host-driven engine's flat argmin).
-        Quarantined lanes are routed around; ``return_stale=True``
-        returns ``(labels, stale)`` (see ``ClusterService.query``).
-        """
-        q = np.asarray(points, np.float32).reshape(-1, 2)
-        self.last_query_degraded = False
-        if self._global is None and self.n_live() == 0:
-            out = np.full((len(q),), -1, np.int32)
-            return (out, False) if return_stale else out
-        if self._dirty or self._global is None:
-            self.refresh()
+    def _read_view(self):
+        # The pinned buffers are donated by append/kill/restore, so the
+        # snapshot must own genuine copies: fetch to host, re-put on the
+        # default device (where the snapshot query kernel runs anyway).
+        return (jnp.asarray(np.asarray(self._pts)),
+                jnp.asarray(np.asarray(self._mask)),
+                jnp.asarray(np.asarray(self._glabels)))
+
+    def _query_sync(self, q: np.ndarray):
+        """Lane-local (best-d2, label) per bbox-routed shard, folded on
+        the host in ascending shard order with a strict ``<`` so ties
+        match the host-driven engine's flat argmin."""
         qmax = self.scfg.max_queries
         k = self.scfg.shards
         eps2 = np.float32(self.cfg.eps) * np.float32(self.cfg.eps)
         degraded = False
+        scanned: set = set()
         out = np.empty((len(q),), np.int32)
         for off in range(0, len(q), qmax):
             chunk = q[off:off + qmax]
             nq = len(chunk)
             scan = self._route(chunk)
             degraded |= self._route_degraded
+            scanned.update(int(s) for s in np.nonzero(scan)[0])
             if not scan.any():
                 out[off:off + nq] = -1
                 continue
@@ -395,10 +397,7 @@ class DistClusterService(ShardControlPlane):
                 best = np.where(upd, bd[s], best)   # the flat argmin
                 lab = np.where(upd, bl[s], lab)
             out[off:off + nq] = np.where(best <= eps2, lab, -1)[:nq]
-        self.last_query_degraded = degraded
-        if degraded:
-            self.degraded_queries += 1
-        return (out, degraded) if return_stale else out
+        return out, degraded, scanned
 
     # -- introspection -------------------------------------------------------
 
@@ -443,4 +442,5 @@ class DistClusterService(ShardControlPlane):
             maps_dev = jax.device_put(
                 np.asarray(svc._maps, np.int32), svc._sh2)
             svc._glabels = svc._fns["labels"](svc._dense, svc._mask, maps_dev)
+            svc._publish_snapshot()
         return svc

@@ -1,0 +1,140 @@
+"""Snapshot-versioned read exactness sweep, run under an 8-device CPU
+override by tests/test_query_tier.py (the device count must be pinned
+before jax initialises, which pytest's process already did with 1
+device).
+
+The contract (DESIGN.md §12): a query answered from snapshot version V
+is BIT-IDENTICAL to a synchronous query against a service frozen at V —
+per PHASE2 layout × shard count {2, 4, 8} × both serve engines.  Per
+cell:
+
+1. **Frozen twin** — stream a prefix into the subject and an identical
+   twin; tier reads (``max_staleness=inf``, pure snapshot path, pow2
+   bucketing, coalescing) off the subject must bit-match the twin's
+   synchronous ``query`` on the same state.
+2. **Racing refresh** — requests submitted BEFORE held-back writes +
+   refreshes land are drained AFTER: every answer must bit-match the
+   twin fed the same writes (the new version in full — never a torn
+   mix), versions stay monotonic, and result arrays captured before the
+   race are byte-identical after it (snapshot immutability under the
+   engines' donated-buffer writes).
+3. **Stale-quarantine degraded reads** — a shard quarantined AFTER the
+   publish still serves its last-good snapshot rows, flagged
+   ``degraded=True``, labels unchanged.
+
+Prints PASS lines; any exception fails.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np
+
+from repro.data import spatial
+from repro.ddc import DDC, DDCConfig
+from repro.serve import query_tier as qt
+
+N = 2048
+SHARD_COUNTS = (2, 4, 8)
+BACKENDS = ("stream", "dist")
+
+
+def build(layout: str, k: int, backend: str):
+    spec = spatial.PHASE2_LAYOUTS[layout]
+    cap = spatial.shard_capacity(N, k)
+    cfg = DDCConfig(
+        eps=spec["eps"], min_pts=spec["min_pts"], grid=spec["grid"],
+        max_clusters=spec["max_clusters"], max_verts=spec["max_verts"],
+        backend=backend, shards=k, capacity=cap,
+        max_batch=min(256, cap)).validate()
+    return DDC(cfg)
+
+
+def probes(svc, seed: int) -> np.ndarray:
+    live, _, _ = svc.live()
+    rng = np.random.default_rng(seed)
+    return np.concatenate([
+        live[rng.integers(0, len(live), 120)],
+        rng.uniform(0, 1, (60, 2)).astype(np.float32),
+        np.array([[6.0, 6.0], [-3.0, 0.5]], np.float32),
+    ])
+
+
+def check_cell(layout: str, k: int, backend: str):
+    spec = spatial.PHASE2_LAYOUTS[layout]
+    pts = spec["make"](N)
+    subject, twin = build(layout, k, backend), build(layout, k, backend)
+
+    batches = spatial.stream_batches(pts, k, 256)
+    prefix, held = batches[:-2], batches[-2:]
+    for model in (subject, twin):
+        for shard, chunk in prefix:
+            model.partial_fit(shard, chunk)
+            model.service.refresh()
+    svc = subject.service
+    v0 = svc.snapshot().version
+    assert v0 >= 1, "refresh did not publish"
+
+    # (1) frozen twin: tier snapshot reads == twin's synchronous query,
+    # bit for bit, through coalescing and pow2 bucketing.
+    tier = qt.QueryTier(svc, max_staleness=float("inf"))
+    q = probes(svc, seed=k)
+    handles = [tier.submit(q[off:off + 48]) for off in range(0, len(q), 48)]
+    tier.drain()
+    for h, off in zip(handles, range(0, len(q), 48)):
+        assert h.result.version == v0, (h.result.version, v0)
+        np.testing.assert_array_equal(
+            np.asarray(h.result),
+            twin.service.query(q[off:off + 48], legacy=True),
+            err_msg=f"snapshot read != frozen twin at V={v0}")
+    frozen_copies = [np.array(h.result.labels) for h in handles]
+
+    # (2) racing refresh: submit first, write+refresh under the queue,
+    # drain after — every answer is the NEW version in full.
+    racers = [tier.submit(q[off:off + 64]) for off in range(0, len(q), 64)]
+    for shard, chunk in held:
+        subject.partial_fit(shard, chunk)
+        svc.refresh()
+        twin.partial_fit(shard, chunk)
+        twin.service.refresh()
+    v1 = svc.snapshot().version
+    assert v1 > v0, "held-back refreshes did not advance the version"
+    tier.drain()
+    for h, off in zip(racers, range(0, len(q), 64)):
+        assert h.result.version == v1, (h.result.version, v1)
+        np.testing.assert_array_equal(
+            np.asarray(h.result),
+            twin.service.query(q[off:off + 64], legacy=True),
+            err_msg=f"racing read != twin frozen at V={v1}")
+    for h, copy in zip(handles, frozen_copies):
+        np.testing.assert_array_equal(
+            np.asarray(h.result), copy,
+            err_msg="published-snapshot answer mutated by later writes")
+
+    # (3) stale-quarantine: quarantined AFTER publish -> last-good rows
+    # still served, flagged degraded.
+    scanned = [s for h in racers for s in h.result.scanned_shards]
+    if scanned:
+        before = [np.array(h.result.labels) for h in racers]
+        svc._quarantine(scanned[0], "chaos drill")
+        stale = [tier.query(q[off:off + 64])
+                 for off in range(0, len(q), 64)]
+        for res, ref in zip(stale, before):
+            np.testing.assert_array_equal(
+                np.asarray(res), ref,
+                err_msg="stale-quarantine read changed the labels")
+        assert any(r.degraded for r in stale
+                   if scanned[0] in r.scanned_shards), \
+            "stale-quarantined shard served without the degraded flag"
+    print(f"PASS {layout} {backend} k={k} v={v0}->{v1}")
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    names = list(spatial.PHASE2_LAYOUTS) if which == "all" else [which]
+    for name in names:
+        for k in SHARD_COUNTS:
+            for backend in BACKENDS:
+                check_cell(name, k, backend)
+    print("ALL_OK")

@@ -1,0 +1,435 @@
+"""High-QPS query-tier suite (DESIGN.md §12): the QueryResult API
+redesign, snapshot-versioned reads, coalesced pow2-bucketed launches,
+the bounded queue, degraded reads, and the typed ServiceStats contract.
+
+* **QueryResult shim** — the structured result must duck-type as its
+  labels ndarray so every pre-redesign caller keeps working, and
+  ``legacy=True`` must return the bare array outright.
+* **Snapshot semantics** — versions are monotonic; reads from version V
+  are bit-identical to a synchronous query on the state frozen at V
+  (the multi-device layout × shards × engine sweep runs in a
+  subprocess: tests/_query_tier_script.py); a racing refresh is seen in
+  full or not at all.
+* **Coalescing/bucketing** — overlapping scan sets share one kernel
+  launch; the jit cache stays under the pow2 bucket-count bound no
+  matter the request-width mix.
+* **Host/jit snapshot path** — repeated queries must NOT re-run the
+  clustering pipeline (the silent-recompute regression).
+* **ServiceStats** — one typed contract over all four backends, with
+  the legacy dict views derived from it.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.data import spatial
+from repro.ddc import (
+    DDC, DDCConfig, QueryResult, QueryTier, QueueFull, ServiceCounters,
+    ServiceGauges, ServiceStats,
+)
+from repro.serve import query_tier as qt
+
+from test_serve_stream import build_service, stream  # noqa: F401
+
+SCRIPT = os.path.join(os.path.dirname(__file__), "_query_tier_script.py")
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_script(arg: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(SRC)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, SCRIPT, arg],
+        capture_output=True, text=True, timeout=1800, env=env)
+    assert proc.returncode == 0, (
+        f"{arg} failed:\n{proc.stdout}\n{proc.stderr}")
+    return proc.stdout
+
+
+def fitted_host(n=512):
+    spec = spatial.PHASE2_LAYOUTS["rings"]
+    pts = spec["make"](n)
+    cfg = DDCConfig(
+        **{k: spec[k] for k in ("eps", "min_pts", "grid", "max_verts",
+                                "max_clusters")},
+        backend="host", shards=2)
+    return DDC(cfg).fit(pts), pts
+
+
+def streamed_service(layout="rings", k=4):
+    svc, pts, spec = build_service(layout, k)
+    stream(svc, pts, k)
+    return svc, pts, spec
+
+
+class TestQueryResultShim:
+    """The structured result must be a drop-in for the old ndarray."""
+
+    def test_fields_and_repr(self):
+        model, pts = fitted_host()
+        res = model.query(pts[:8])
+        assert isinstance(res, QueryResult)
+        assert res.version >= 1
+        assert res.degraded is False
+        assert isinstance(res.scanned_shards, tuple)
+        assert res.latency_ms >= 0.0
+        assert "version" in repr(res)
+
+    def test_ndarray_duck_typing(self):
+        model, pts = fitted_host()
+        res = model.query(pts[:16])
+        assert np.asarray(res).dtype == np.int32
+        assert len(res) == 16 and res.shape == (16,)
+        assert list(res) == res.tolist()
+        assert res[0] == res.labels[0]
+        # comparison dunders (the np.mean(labels >= 0) idiom)
+        assert 0.0 <= float(np.mean(res >= 0)) <= 1.0
+        np.testing.assert_array_equal(np.where(res >= 0, res.labels, -1),
+                                      res.labels)
+
+    def test_legacy_flag_returns_bare_ndarray(self):
+        model, pts = fitted_host()
+        bare = model.query(pts[:8], legacy=True)
+        assert type(bare) is np.ndarray
+        np.testing.assert_array_equal(bare, model.query(pts[:8]).labels)
+
+    def test_service_return_stale_keeps_tuple_shape(self):
+        svc, pts, _ = streamed_service()
+        out, stale = svc.query(pts[:8], return_stale=True)
+        assert isinstance(out, QueryResult) and stale is False
+
+
+class TestSnapshotVersioning:
+    def test_version_monotonic_over_refreshes(self):
+        svc, pts, _ = streamed_service()
+        v = svc.snapshot().version
+        assert v >= 1
+        svc.ingest(0, pts[:4])
+        svc.refresh()
+        assert svc.snapshot().version == v + 1
+
+    def test_empty_service_short_circuits_at_version_zero(self):
+        svc, pts, _ = build_service("rings", 2)
+        res = svc.query(np.array([[0.5, 0.5]], np.float32))
+        assert res.version == 0 and res[0] == -1
+        assert svc.snapshot() is None and svc.read_snapshot() is None
+
+    def test_snapshot_read_bit_equals_frozen_sync(self):
+        """max_staleness=inf tier reads == the engine's own sync query
+        on the same frozen state (the in-process single-device twin of
+        the subprocess sweep)."""
+        svc, pts, _ = streamed_service()
+        tier = QueryTier(svc, max_staleness=float("inf"))
+        rng = np.random.default_rng(0)
+        q = np.concatenate([pts[rng.integers(0, len(pts), 100)],
+                            rng.uniform(0, 1, (40, 2)).astype(np.float32)])
+        res = tier.query(q)
+        assert res.version == svc.snapshot().version
+        np.testing.assert_array_equal(np.asarray(res),
+                                      svc.query(q, legacy=True))
+
+    def test_stale_snapshot_serves_pre_write_state(self):
+        """Writes WITHOUT a refresh never move the published view: an
+        inf-staleness tier keeps answering from the last version in
+        full — stale but consistent, never torn."""
+        svc, pts, _ = streamed_service()
+        tier = QueryTier(svc, max_staleness=float("inf"))
+        q = pts[:64]
+        before = np.array(tier.query(q).labels)
+        v = svc.snapshot().version
+        svc.ingest(0, np.full((8, 2), 0.503, np.float32))   # dirty, unpublished
+        res = tier.query(q)
+        assert res.version == v
+        np.testing.assert_array_equal(np.asarray(res), before)
+        svc.refresh()
+        assert svc.snapshot().version == v + 1
+        assert tier.query(q).version == v + 1
+
+    def test_fresh_policy_folds_pending_writes(self):
+        """max_staleness=None (the facade default) refreshes dirty
+        state before answering — the legacy read semantics."""
+        svc, pts, _ = streamed_service()
+        tier = QueryTier(svc, max_staleness=None)
+        v = svc.snapshot().version
+        svc.ingest(0, pts[:4])
+        assert tier.query(pts[:16]).version == v + 1
+
+    def test_restore_republishes_and_version_continues(self, tmp_path):
+        model, pts = fitted_host()
+        model.query(pts[:4])       # batch backends publish on first read
+        v = model.backend.snapshot().version
+        model.save(str(tmp_path / "ckpt"))
+        restored = DDC.load(str(tmp_path / "ckpt"))
+        res = restored.query(pts[:8])
+        assert res.version >= 1
+        np.testing.assert_array_equal(np.asarray(res),
+                                      model.query(pts[:8], legacy=True))
+        assert v >= 1
+
+
+class TestCoalescing:
+    def test_overlapping_requests_share_one_launch(self):
+        svc, pts, _ = streamed_service()
+        tier = QueryTier(svc, max_staleness=float("inf"))
+        tier.query(pts[:4])                      # compile + warm routing
+        launches0 = tier.query_launches
+        for off in (0, 8, 16):                    # same region: scan overlap
+            tier.submit(pts[off:off + 8])
+        tier.drain()
+        assert tier.query_launches == launches0 + 1
+        assert tier.coalesced_requests >= 3
+
+    def test_out_of_bounds_request_skips_the_kernel(self):
+        svc, pts, _ = streamed_service()
+        tier = QueryTier(svc, max_staleness=float("inf"))
+        h1 = tier.submit(pts[:8])
+        h2 = tier.submit(np.array([[9.0, 9.0]], np.float32))
+        tier.drain()
+        assert h2.result.scanned_shards == ()
+        assert h2.result[0] == -1
+        assert h1.result.scanned_shards != ()
+
+    def test_coalesced_answers_equal_individual_sync(self):
+        svc, pts, _ = streamed_service()
+        tier = QueryTier(svc, max_staleness=float("inf"))
+        rng = np.random.default_rng(3)
+        chunks = [rng.uniform(0, 1, (n, 2)).astype(np.float32)
+                  for n in (5, 33, 17, 64)]
+        handles = [tier.submit(c) for c in chunks]
+        tier.drain()
+        for c, h in zip(chunks, handles):
+            np.testing.assert_array_equal(np.asarray(h.result),
+                                          svc.query(c, legacy=True))
+
+
+class TestBucketing:
+    def test_jit_cache_bounded_by_pow2_buckets(self):
+        """Any mix of request widths compiles at most (#query buckets ×
+        #shard-width buckets) kernel entries — the ISSUE's cache-bound
+        assertion."""
+        k = 4
+        svc, pts, _ = streamed_service(k=k)
+        tier = QueryTier(svc, max_queries=256, bucket_min=16,
+                         max_staleness=float("inf"))
+        qt.clear_snapshot_query_cache()
+        rng = np.random.default_rng(7)
+        for n in (1, 2, 3, 7, 15, 16, 17, 31, 40, 64, 100, 200, 256, 300):
+            tier.query(rng.uniform(0, 1, (n, 2)).astype(np.float32))
+        assert qt.snapshot_query_cache_entries() <= tier.cache_bound(k), (
+            qt.snapshot_query_cache_entries(), tier.cache_bound(k))
+
+    def test_pow2_bucket_maths(self):
+        assert qt.pow2_bucket(1, 16, 256) == 16
+        assert qt.pow2_bucket(16, 16, 256) == 16
+        assert qt.pow2_bucket(17, 16, 256) == 32
+        assert qt.pow2_bucket(300, 16, 256) == 256
+
+    def test_bucketing_is_invisible_in_answers(self):
+        svc, pts, _ = streamed_service()
+        tier = QueryTier(svc, bucket_min=16, max_staleness=float("inf"))
+        for n in (3, 17, 63):
+            c = pts[:n]
+            np.testing.assert_array_equal(np.asarray(tier.query(c)),
+                                          svc.query(c, legacy=True))
+
+
+class TestQueueAndDeadlines:
+    def test_queue_full_backpressure(self):
+        svc, pts, _ = streamed_service()
+        tier = QueryTier(svc, queue_depth=3, max_staleness=float("inf"))
+        for _ in range(3):
+            tier.submit(pts[:4])
+        with pytest.raises(QueueFull, match="drain"):
+            tier.submit(pts[:4])
+        tier.drain()
+        tier.submit(pts[:4])                     # drained: accepts again
+        assert tier.pending == 1
+
+    def test_missed_deadline_still_answered_and_counted(self):
+        svc, pts, _ = streamed_service()
+        tier = QueryTier(svc, max_staleness=float("inf"))
+        import time as _time
+        h = tier.submit(pts[:8], deadline=_time.monotonic() - 1.0)
+        tier.drain()
+        assert tier.deadline_misses == 1
+        np.testing.assert_array_equal(np.asarray(h.result),
+                                      svc.query(pts[:8], legacy=True))
+
+    def test_facade_tier_uses_config_knobs(self):
+        spec = spatial.PHASE2_LAYOUTS["rings"]
+        cfg = DDCConfig(
+            **{k: spec[k] for k in ("eps", "min_pts", "grid", "max_verts",
+                                    "max_clusters")},
+            backend="stream", shards=2, capacity=512, queue_depth=5,
+            query_bucket_min=32, max_staleness=float("inf"))
+        model = DDC(cfg).fit(spec["make"](512))
+        tier = model.query_tier
+        assert tier.queue_depth == 5
+        assert tier.bucket_min == 32
+        assert tier.max_staleness == float("inf")
+        assert model.query_tier is tier          # one tier per backend
+
+    def test_config_rejects_bad_tier_knobs(self):
+        from repro.ddc import ConfigError
+        with pytest.raises(ConfigError, match="queue_depth"):
+            DDCConfig(queue_depth=0).validate()
+        with pytest.raises(ConfigError, match="power of two"):
+            DDCConfig(query_bucket_min=24).validate()
+        with pytest.raises(ConfigError, match="max_staleness"):
+            DDCConfig(max_staleness=-1.0).validate()
+
+
+class TestDegradedReads:
+    """Quarantine semantics carried into the snapshot path (§11 ∘ §12)."""
+
+    def test_stale_quarantine_serves_last_good_rows(self):
+        svc, pts, _ = streamed_service()
+        tier = QueryTier(svc, max_staleness=float("inf"))
+        q = pts[:64]
+        healthy = tier.query(q)
+        assert healthy.degraded is False
+        target = healthy.scanned_shards[0]
+        svc._quarantine(target, "chaos drill")   # AFTER the publish
+        stale = tier.query(q)
+        assert stale.degraded is True
+        assert stale.version == healthy.version
+        np.testing.assert_array_equal(np.asarray(stale),
+                                      np.asarray(healthy))
+
+    def test_publish_time_quarantine_routes_around_like_sync(self):
+        svc, pts, _ = streamed_service()
+        q = pts[:64]
+        target = svc.query(q).scanned_shards[0]
+        svc._quarantine(target, "chaos drill")
+        svc.refresh(force=True)                  # publish WITH the quarantine
+        tier = QueryTier(svc, max_staleness=float("inf"))
+        res = tier.query(q)
+        assert res.degraded is True
+        assert target not in res.scanned_shards
+        np.testing.assert_array_equal(np.asarray(res),
+                                      svc.query(q, legacy=True))
+
+
+class TestHostJitSnapshotPath:
+    """Satellite fix: DDC.query on the batch backends must answer from
+    the published snapshot, not silently re-run the pipeline per call."""
+
+    @pytest.mark.parametrize("backend", ("host", "jit"))
+    def test_repeated_queries_do_not_recompute(self, backend):
+        spec = spatial.PHASE2_LAYOUTS["rings"]
+        pts = spec["make"](512)
+        cfg = DDCConfig(
+            **{k: spec[k] for k in ("eps", "min_pts", "grid", "max_verts",
+                                    "max_clusters")},
+            # this pytest process sees ONE device: jit runs single-shard
+            backend=backend, shards=2 if backend == "host" else 1)
+        model = DDC(cfg).fit(pts)
+        r1 = model.query(pts[:32])
+        for _ in range(5):
+            r2 = model.query(pts[:32])
+        assert model.backend.refits == 1, (
+            "query() re-ran the clustering pipeline per call")
+        assert r1.version == r2.version == 1
+        np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+
+    def test_query_matches_own_labels(self):
+        model, pts = fitted_host()
+        labels = model.labels_
+        got = model.query(pts)
+        clustered = labels >= 0
+        np.testing.assert_array_equal(np.asarray(got)[clustered],
+                                      labels[clustered])
+
+    def test_refit_bumps_version(self):
+        model, pts = fitted_host()
+        v1 = model.query(pts[:8]).version
+        model.partial_fit(0, pts[:4])
+        v2 = model.query(pts[:8]).version
+        assert v2 == v1 + 1
+
+
+class TestServiceStats:
+    BACKENDS = ("host", "jit", "stream")
+
+    def make(self, backend):
+        spec = spatial.PHASE2_LAYOUTS["rings"]
+        pts = spec["make"](512)
+        cfg = DDCConfig(
+            **{k: spec[k] for k in ("eps", "min_pts", "grid", "max_verts",
+                                    "max_clusters")},
+            # one-device pytest process: jit runs single-shard
+            backend=backend, shards=2 if backend != "jit" else 1,
+            capacity=512 if backend in ("stream", "dist") else None)
+        return DDC(cfg).fit(pts), pts
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_typed_contract(self, backend):
+        model, pts = self.make(backend)
+        model.query(pts[:16])
+        stats = model.stats()
+        assert isinstance(stats, ServiceStats)
+        assert isinstance(stats.counters, ServiceCounters)
+        assert isinstance(stats.gauges, ServiceGauges)
+        assert stats.backend == backend
+        assert stats.gauges.snapshot_version >= 1
+        assert stats.counters.snapshots_published >= 1
+
+    def test_identical_key_sets_across_backends(self):
+        keys = set()
+        for backend in self.BACKENDS:
+            model, pts = self.make(backend)
+            model.query(pts[:8])
+            d = model.stats().as_dict(nest_comm=False)
+            keys.add(frozenset(d))
+        assert len(keys) == 1, "backends disagree on the stats dict keys"
+
+    def test_dict_views_derive_from_typed(self):
+        model, pts = self.make("stream")
+        model.query(pts[:16])
+        stats = model.stats()
+        d = stats.as_dict()
+        assert d["refreshes"] == stats.counters.refreshes
+        assert d["snapshot_version"] == stats.gauges.snapshot_version
+        assert d["quarantined_shards"] == stats.counters.quarantine_events
+        comm = model.comm_stats()
+        assert comm["backend"] == "stream"
+        assert comm["snapshot_version"] == d["snapshot_version"]
+
+    def test_counters_monotonic_gauges_not(self):
+        model, pts = self.make("stream")
+        model.query(pts[:16])
+        c1 = model.stats().counters
+        model.partial_fit(0, pts[:4])
+        model.query(pts[:16])
+        c2 = model.stats().counters
+        import dataclasses as dc
+        for f in dc.fields(ServiceCounters):
+            assert getattr(c2, f.name) >= getattr(c1, f.name), f.name
+
+    def test_tier_counters_fold_into_stats(self):
+        model, pts = self.make("stream")
+        tier = model.query_tier
+        tier.query(pts[:16])
+        tier.query(pts[:16])
+        stats = model.stats()
+        assert stats.counters.queries_served == 2
+        assert stats.counters.query_launches >= 1
+
+
+class TestSubprocessSweep:
+    """The layout × {2,4,8} shards × both-engines frozen-twin
+    bit-exactness sweep, in an 8-device subprocess."""
+
+    def test_quick(self):
+        out = run_script("linked_ovals")
+        assert "ALL_OK" in out and out.count("PASS") == 6
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("layout", sorted(spatial.PHASE2_LAYOUTS))
+    def test_sweep(self, layout):
+        out = run_script(layout)
+        assert "ALL_OK" in out and out.count("PASS") == 6
