@@ -224,6 +224,64 @@ def check_serve(doc: dict):
                  "delta bound")
 
 
+def check_hierarchy(doc: dict):
+    _require(doc.get("schema") == "hierarchy-bench/v1",
+             f"hierarchy: bad schema tag {doc.get('schema')!r}")
+    smoke = bool(doc.get("smoke", False))
+    rows = _typed(doc, "rows", list, "hierarchy")
+    _require(len(rows) > 0, "hierarchy: rows is empty")
+    _typed(doc, "cfg", dict, "hierarchy")
+    seen = set()
+    for i, row in enumerate(rows):
+        ctx = f"hierarchy.rows[{i}]"
+        k = _typed(row, "shards", int, ctx)
+        _require(k >= 2, f"{ctx}: shards < 2")
+        d = _typed(row, "degree", int, ctx)
+        _require(d >= 2 and d & (d - 1) == 0,
+                 f"{ctx}: degree {d} not a power of two >= 2")
+        _require(_typed(row, "depth", int, ctx) >= 1, f"{ctx}: depth < 1")
+        _require(_typed(row, "n_nodes", int, ctx) >= row["depth"],
+                 f"{ctx}: fewer nodes than levels")
+        for key in ("flat_build_ms", "hier_build_ms", "flat_refresh_ms",
+                    "hier_refresh_ms", "flat_churn_ms", "hier_churn_ms"):
+            _require(_typed(row, key, (int, float), ctx) > 0,
+                     f"{ctx}: {key} <= 0")
+        b = _typed(row, "buffer_bytes", int, ctx)
+        for key in ("flat_refresh_bytes", "hier_refresh_bytes",
+                    "flat_churn_bytes", "hier_churn_bytes",
+                    "flat_bottleneck_bytes", "hier_bottleneck_bytes"):
+            _require(_typed(row, key, int, ctx) >= b,
+                     f"{ctx}: {key} below one wire buffer")
+        # The §13 exactness gates: hierarchical must be indistinguishable
+        # from flat except through the comm meter.
+        for key in ("maps_match", "valid_match", "sizes_match",
+                    "root_d2_exact"):
+            _require(_typed(row, key, bool, ctx) is True,
+                     f"{ctx}: {key} is not true — tree diverged from flat")
+        _require(_typed(row, "overflow", bool, ctx) is False,
+                 f"{ctx}: slot budget overflowed")
+        # The §13 scaling gates: past 32 shards the tree must win BOTH
+        # steady-state bytes and latency.
+        if k >= 32:
+            _require(row["hier_refresh_bytes"] < row["flat_refresh_bytes"],
+                     f"{ctx}: tree moved >= bytes than flat at {k} shards")
+            _require(row["hier_refresh_ms"] < row["flat_refresh_ms"],
+                     f"{ctx}: tree refresh slower than flat at {k} shards")
+        seen.add((k, d))
+    ks = {k for (k, _) in seen}
+    _require(len({d for (_, d) in seen}) >= 2,
+             "hierarchy: fewer than 2 tree degrees")
+    _require(max(ks) >= 32, "hierarchy: sweep never reaches 32 shards")
+    if not smoke:
+        _require(max(ks) >= 256, "hierarchy: full sweep never reaches "
+                                 "256 shards")
+    summary = _typed(doc, "summary", dict, "hierarchy")
+    for key in ("all_equiv_flat", "hier_wins_bytes_ge32",
+                "hier_wins_latency_ge32"):
+        _require(summary.get(key) is True,
+                 f"hierarchy.summary: {key} is not true")
+
+
 def check_recovery(doc: dict):
     _require(doc.get("schema") == "recovery-bench/v1",
              f"recovery: bad schema tag {doc.get('schema')!r}")
@@ -282,6 +340,9 @@ def check_file(path: str):
     if doc.get("schema") == "recovery-bench/v1":
         check_recovery(doc)
         return "recovery"
+    if doc.get("schema") == "hierarchy-bench/v1":
+        check_hierarchy(doc)
+        return "hierarchy"
     if "bt" in doc:
         check_phase1(doc)
         return "phase1"

@@ -1,0 +1,308 @@
+"""Hierarchical vs flat aggregator benchmark (DESIGN.md §13) — the comm
+bytes and refresh latency of the tree-of-aggregators against the flat
+single-aggregator delta path, at shard counts the flat design was never
+meant to reach.
+
+Workload: a fixed blob layout (8 well-separated Gaussian clusters,
+contiguous partition so a subtree covers a contiguous point range) is
+clustered per shard with ``local_phase``, then the two aggregator
+topologies fold the IDENTICAL (K, C, …) batch:
+
+* **flat** — one ``merge_delta`` owner of the full (K·C)² cache; every
+  refresh patches the dirty rows and re-runs the global closure, and the
+  down-leg broadcasts a (C,) slot-map row to all K shards (the engine's
+  ``_meter_maps_down`` model: K·C·4 bytes);
+* **hier** — ``AggregatorTree`` at degree 2 and 4: a dirty shard patches
+  its leaf and propagates only while summaries keep changing; bytes are
+  the tree's own accounting (shard payloads + internal summary edges ×
+  buffer_bytes, down map edges + changed shard rows × C·4).
+
+Per cell (K ∈ 16–256, smoke 16/32) it measures the cold build, the
+steady-state single-dirty refresh (the common serving case: one shard
+re-ingested, global structure unchanged — the tree absorbs at the leaf,
+the flat path must re-run the full closure to discover the same), and a
+churn refresh (the dirty shard's summary genuinely changes, forcing a
+full root path) — then hard-fails unless the tree's slot maps and the
+root occupancy are BIT-IDENTICAL to flat, every node cache equals a
+from-scratch rebuild, and the tree wins BOTH steady-state bytes and
+latency at K ≥ 32.
+
+Writes ``BENCH_hierarchy.json`` (schema ``hierarchy-bench/v1``,
+``benchmarks/check_bench.py``).  ``--smoke`` trims the shard sweep for
+CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _parse_args(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny CI subset: 16/32 shards only")
+    p.add_argument("--out", default=None, help="output JSON path")
+    return p.parse_args(argv)
+
+
+_ARGS = None
+if __name__ == "__main__":
+    _ARGS = _parse_args()
+
+import jax                                            # noqa: E402
+import jax.numpy as jnp                               # noqa: E402
+import numpy as np                                    # noqa: E402
+
+from repro.core import ddc                            # noqa: E402
+from repro.serve.hierarchy import AggregatorTree      # noqa: E402
+
+N = 8192
+BLOBS = 8
+DEGREES = (2, 4)
+SHARDS_FULL = (16, 32, 64, 128, 256)
+SHARDS_SMOKE = (16, 32)
+# Small slot budgets on purpose: the flat cache is (K·C)² and the full
+# closure O((K·C)²·V²), so production-sized C/V at K=256 is exactly the
+# wall this benchmark demonstrates — the budgets only need to fit the
+# blob layout (8 global clusters, ≤ a few fragments per shard).
+CFG = ddc.DDCConfig(eps=0.03, min_pts=3, grid=48,
+                    max_clusters=8, max_verts=24)
+
+
+def make_points(n: int = N, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    centers = [(0.18 + 0.32 * (i % 3), 0.18 + 0.32 * (i // 3))
+               for i in range(BLOBS)]
+    per = n // BLOBS
+    pts = np.concatenate([
+        c + rng.normal(scale=0.018, size=(per, 2)) for c in centers])
+    return np.clip(pts, 0.01, 0.99).astype(np.float32)
+
+
+def shard_batch(pts: np.ndarray, k: int) -> ddc.ClusterSet:
+    """Contiguous partition → per-shard ``local_phase`` → (K, C, …)."""
+    slices = np.array_split(pts, k)
+    cap = max(len(s) for s in slices)
+    sets = []
+    for sl in slices:
+        buf = np.zeros((cap, 2), np.float32)
+        buf[:len(sl)] = sl
+        mask = np.zeros((cap,), bool)
+        mask[:len(sl)] = True
+        _, cs = ddc.local_phase(jnp.asarray(buf), jnp.asarray(mask), CFG)
+        sets.append(cs)
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *sets)
+
+
+def min_time(fn, reps: int = 3) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, (time.perf_counter() - t0) * 1e3)
+    return best
+
+
+def hier_refresh_bytes(stats: dict, bbytes: int, row: int) -> int:
+    """The tree's wire model for one refresh: dirty shard payloads and
+    internal summary pushes cost a ClusterSet each; down map edges and
+    changed shard rows cost a (C,) i32 row each."""
+    return (stats["up_shard_payloads"] * bbytes
+            + stats["internal_up_edges"] * bbytes
+            + stats["down_internal_edges"] * row
+            + stats["down_shard_rows"] * row)
+
+
+def flat_arm(batch, batch_alt, k: int, reps: int) -> dict:
+    bbytes, row = CFG.buffer_bytes(), CFG.max_clusters * 4
+    t0 = time.perf_counter()
+    merged, maps, d2 = ddc.merge_delta(batch, None, None, CFG, None)
+    jax.block_until_ready(maps)
+    build_ms = (time.perf_counter() - t0) * 1e3
+    state = {"d2": d2, "maps": maps, "merged": merged}
+
+    def refresh(b):
+        state["merged"], state["maps"], state["d2"] = ddc.merge_delta(
+            b, state["d2"], [0], CFG, None)
+        jax.block_until_ready(state["maps"])
+
+    refresh(batch)                       # compile the patch path
+    steady_ms = min_time(lambda: refresh(batch), reps)
+    refresh(batch_alt)                   # compile nothing new; settle
+    churn_ms = min_time(
+        lambda: (refresh(batch), refresh(batch_alt)), reps) / 2
+    refresh(batch)                       # end on the reference batch
+    return {
+        "build_ms": round(build_ms, 2),
+        "steady_ms": round(steady_ms, 3),
+        "churn_ms": round(churn_ms, 3),
+        # one shard payload up + the engine's K-row map broadcast down
+        "steady_bytes": bbytes + k * row,
+        "churn_bytes": bbytes + k * row,
+        "bottleneck_bytes": bbytes + k * row,
+        "merged": state["merged"],
+        "maps": np.asarray(state["maps"]),
+    }
+
+
+def hier_arm(batch, batch_alt, k: int, degree: int, reps: int) -> dict:
+    bbytes, row = CFG.buffer_bytes(), CFG.max_clusters * 4
+    tree = AggregatorTree(k, degree, CFG)
+    t0 = time.perf_counter()
+    tree.refresh(batch, None, None)
+    jax.block_until_ready(tree.levels[-1][0].summary)
+    build_ms = (time.perf_counter() - t0) * 1e3
+
+    tree.refresh(batch, [0], None)       # compile the leaf patch path
+    steady_ms = min_time(lambda: tree.refresh(batch, [0], None), reps)
+    tree.refresh(batch, [0], None)
+    steady_stats = dict(tree.last_stats)
+    steady_bottleneck = steady_stats["bottleneck_bytes"]
+
+    tree.refresh(batch_alt, [0], None)   # settle the toggle
+    churn_ms = min_time(
+        lambda: (tree.refresh(batch, [0], None),
+                 tree.refresh(batch_alt, [0], None)), reps) / 2
+    tree.refresh(batch, [0], None)
+    churn_stats = dict(tree.last_stats)
+    g, maps = tree.refresh(batch, [0], None)
+    return {
+        "degree": degree,
+        "depth": tree.depth,
+        "n_nodes": tree.n_nodes,
+        "build_ms": round(build_ms, 2),
+        "steady_ms": round(steady_ms, 3),
+        "churn_ms": round(churn_ms, 3),
+        "steady_bytes": hier_refresh_bytes(steady_stats, bbytes, row),
+        "churn_bytes": hier_refresh_bytes(churn_stats, bbytes, row),
+        "bottleneck_bytes": steady_bottleneck,
+        "absorbed_steady": steady_stats["absorbed"],
+        "cache_exact": tree.cache_exact(),
+        "merged": g,
+        "maps": np.asarray(maps),
+    }
+
+
+def bench_cell(pts, pts_alt, k: int, reps: int = 3) -> list:
+    batch = shard_batch(pts, k)
+    batch_alt = jax.tree.map(
+        lambda b, a: b.at[0].set(a[0]), batch, shard_batch(pts_alt, k))
+    flat = flat_arm(batch, batch_alt, k, reps)
+    n_clusters = int(np.asarray(flat["merged"].valid).sum())
+    rows = []
+    for degree in DEGREES:
+        hier = hier_arm(batch, batch_alt, k, degree, reps)
+        rows.append({
+            "shards": k,
+            "degree": degree,
+            "depth": hier["depth"],
+            "n_nodes": hier["n_nodes"],
+            "n_clusters": n_clusters,
+            "flat_build_ms": flat["build_ms"],
+            "hier_build_ms": hier["build_ms"],
+            "flat_refresh_ms": flat["steady_ms"],
+            "hier_refresh_ms": hier["steady_ms"],
+            "flat_churn_ms": flat["churn_ms"],
+            "hier_churn_ms": hier["churn_ms"],
+            "flat_refresh_bytes": flat["steady_bytes"],
+            "hier_refresh_bytes": hier["steady_bytes"],
+            "flat_churn_bytes": flat["churn_bytes"],
+            "hier_churn_bytes": hier["churn_bytes"],
+            "flat_bottleneck_bytes": flat["bottleneck_bytes"],
+            "hier_bottleneck_bytes": hier["bottleneck_bytes"],
+            "buffer_bytes": CFG.buffer_bytes(),
+            "absorbed_steady": hier["absorbed_steady"],
+            "maps_match": bool(np.array_equal(hier["maps"], flat["maps"])),
+            "valid_match": bool(np.array_equal(
+                np.asarray(hier["merged"].valid),
+                np.asarray(flat["merged"].valid))),
+            "sizes_match": bool(np.array_equal(
+                np.asarray(hier["merged"].sizes),
+                np.asarray(flat["merged"].sizes))),
+            "root_d2_exact": bool(hier["cache_exact"]),
+            "overflow": bool(np.asarray(flat["merged"].overflow)
+                             | np.asarray(hier["merged"].overflow)),
+        })
+    return rows
+
+
+def run(smoke: bool = False, out_path: str | None = None,
+        print_rows: bool = True):
+    shards = SHARDS_SMOKE if smoke else SHARDS_FULL
+    pts = make_points(seed=0)
+    pts_alt = make_points(seed=1)        # churn variant for shard 0
+    rows = []
+    for k in shards:
+        for row in bench_cell(pts, pts_alt, k):
+            rows.append(row)
+            if print_rows:
+                print(f"hier_k{k}_d{row['degree']}: "
+                      f"refresh flat={row['flat_refresh_ms']}ms/"
+                      f"{row['flat_refresh_bytes']}B "
+                      f"hier={row['hier_refresh_ms']}ms/"
+                      f"{row['hier_refresh_bytes']}B "
+                      f"churn flat={row['flat_churn_ms']}ms "
+                      f"hier={row['hier_churn_ms']}ms "
+                      f"maps={row['maps_match']} "
+                      f"d2={row['root_d2_exact']}")
+
+    all_equiv = all(r["maps_match"] and r["valid_match"] and r["sizes_match"]
+                    and r["root_d2_exact"] and not r["overflow"]
+                    for r in rows)
+    high_k = [r for r in rows if r["shards"] >= 32]
+    wins_bytes = all(r["hier_refresh_bytes"] < r["flat_refresh_bytes"]
+                     for r in high_k)
+    wins_latency = all(r["hier_refresh_ms"] < r["flat_refresh_ms"]
+                       for r in high_k)
+    summary = {
+        "all_equiv_flat": all_equiv,
+        "hier_wins_bytes_ge32": wins_bytes,
+        "hier_wins_latency_ge32": wins_latency,
+        "max_shards": max(shards),
+        "mean_flat_over_hier_bytes": round(float(np.mean(
+            [r["flat_refresh_bytes"] / r["hier_refresh_bytes"]
+             for r in rows])), 2),
+        "mean_flat_over_hier_ms": round(float(np.mean(
+            [r["flat_refresh_ms"] / r["hier_refresh_ms"]
+             for r in rows])), 2),
+    }
+    out = {
+        "schema": "hierarchy-bench/v1",
+        "smoke": bool(smoke),
+        "n": N,
+        "blobs": BLOBS,
+        "shards": list(shards),
+        "degrees": list(DEGREES),
+        "cfg": {"eps": CFG.eps, "min_pts": CFG.min_pts, "grid": CFG.grid,
+                "max_clusters": CFG.max_clusters,
+                "max_verts": CFG.max_verts},
+        "rows": rows,
+        "summary": summary,
+    }
+    if out_path is None:
+        out_path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_hierarchy.json")
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+    if print_rows:
+        print("summary:", json.dumps(summary))
+        print("wrote", out_path)
+    if not (all_equiv and wins_bytes and wins_latency):
+        bad = [(r["shards"], r["degree"]) for r in rows
+               if not (r["maps_match"] and r["valid_match"]
+                       and r["sizes_match"] and r["root_d2_exact"]
+                       and not r["overflow"])]
+        bad += [(r["shards"], r["degree"], "bytes") for r in high_k
+                if r["hier_refresh_bytes"] >= r["flat_refresh_bytes"]]
+        bad += [(r["shards"], r["degree"], "latency") for r in high_k
+                if r["hier_refresh_ms"] >= r["flat_refresh_ms"]]
+        print("HIERARCHY BENCH FAILED:", bad, file=sys.stderr)
+        raise SystemExit(1)
+    return rows
+
+
+if __name__ == "__main__":
+    run(smoke=_ARGS.smoke, out_path=_ARGS.out)

@@ -290,6 +290,35 @@ def update_pair_d2(pair_d2: jax.Array, batch: ClusterSet, shard,
     return jax.lax.dynamic_update_slice(pair_d2, rows.T, (0, row0))
 
 
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0,))
+def update_pair_d2_many(pair_d2: jax.Array, batch: ClusterSet, shards,
+                        cfg: DDCConfig) -> jax.Array:
+    """Batched ``update_pair_d2``: refresh the rows + columns of EVERY
+    shard in ``shards`` ((m,) i32, traced) with one rectangular
+    ``cross_min_d2`` over the m·C dirty rows.  Replaces the sequential
+    per-shard patch loop, which recomputed every dirty×dirty block once
+    per dirty shard (m× redundant work) and paid m kernel dispatches.
+
+    Bit-exact vs the loop: each dirty row is the identical per-row
+    difference-form computation over the identical batch (the dirty rows
+    were all replaced before any patch runs), and the column mirror is
+    exact under IEEE symmetry — so scatter order cannot matter, even for
+    duplicated indices (callers pad ``shards`` to a power of two by
+    repeating an entry; the duplicate writes carry bit-identical values).
+    """
+    c, v = cfg.max_clusters, cfg.max_verts
+    m = batch.valid.shape[0] * c
+    contours = batch.contours.reshape(m, v, 2)
+    counts = batch.counts.reshape(m)
+    valid = batch.valid.reshape(m)
+    rows_idx = (shards[:, None] * c
+                + jnp.arange(c, dtype=jnp.int32)[None, :]).reshape(-1)
+    rows = cross_min_d2(contours[rows_idx], counts[rows_idx],
+                        valid[rows_idx], contours, counts, valid)  # (mC, M)
+    pair_d2 = pair_d2.at[rows_idx].set(rows)
+    return pair_d2.at[:, rows_idx].set(rows.T)
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def merge_from_d2(batch: ClusterSet, pair_d2: jax.Array,
                   cfg: DDCConfig,
@@ -380,7 +409,10 @@ def merge_delta(batch: ClusterSet, pair_d2: jax.Array | None,
     ``batch`` is the aggregator's mirror of every shard's ClusterSet with
     the ``dirty`` rows already replaced by the freshly exchanged deltas
     (the only payload that crossed the axis).  With a cached ``pair_d2``
-    the matrix is patched one dirty shard at a time (``update_pair_d2``);
+    the matrix is patched in one batched update over every dirty shard
+    (``update_pair_d2_many``; a single dirty shard keeps the narrower
+    ``update_pair_d2`` kernel, and the dirty list is padded to a power of
+    two so compilations stay bounded at log2(K) per config);
     with ``pair_d2=None`` (or ``dirty=None``) it is rebuilt from scratch
     in the same difference form (``contour_pair_d2_exact``), so both
     paths produce the bit-identical matrix — the DESIGN.md §8 exactness
@@ -396,8 +428,14 @@ def merge_delta(batch: ClusterSet, pair_d2: jax.Array | None,
     if pair_d2 is None or dirty is None:
         pair_d2 = contour_pair_d2_exact(batch, cfg)
     else:
-        for i in dirty:
-            pair_d2 = update_pair_d2(pair_d2, batch, i, cfg)
+        dirty = [int(i) for i in dirty]
+        if len(dirty) == 1:
+            pair_d2 = update_pair_d2(pair_d2, batch, dirty[0], cfg)
+        elif len(dirty) > 1:
+            width = 1 << (len(dirty) - 1).bit_length()
+            padded = dirty + [dirty[-1]] * (width - len(dirty))
+            pair_d2 = update_pair_d2_many(
+                pair_d2, batch, jnp.asarray(padded, jnp.int32), cfg)
     merged, maps = merge_from_d2(batch, pair_d2, cfg, exclude)
     return merged, maps, pair_d2
 

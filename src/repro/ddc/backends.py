@@ -481,6 +481,7 @@ class StreamBackend(Backend):
             max_retries=self.cfg.max_retries,
             retry_backoff=self.cfg.retry_backoff,
             journal_limit=self.cfg.journal_limit,
+            agg_degree=self.cfg.agg_degree,
             ddc=self.cfg.core())
 
     def _build(self, capacity: int):
@@ -571,6 +572,7 @@ class StreamBackend(Backend):
                                              self.cfg.retry_backoff)),
             journal_limit=int(manifest.get("journal_limit",
                                            self.cfg.journal_limit)),
+            agg_degree=manifest.get("agg_degree", self.cfg.agg_degree),
             ddc=self.cfg.core())
         self._svc = self._svc_cls().from_state(
             scfg, arrays, manifest, meter=self.meter, faults=self.faults)

@@ -65,6 +65,8 @@ class DDCConfig:
     max_retries: int = 2             # delta re-deliveries per refresh
     retry_backoff: float = 0.0       # seconds; doubles per retry round
     journal_limit: int = 1024        # per-shard WAL entries before compaction
+    agg_degree: Optional[int] = None  # None: flat aggregator; >=2: the
+    #                                  DESIGN §13 tree-of-aggregators fan-in
 
     # Query-tier knobs (DESIGN.md §12; all backends).
     queue_depth: int = 64            # bounded request queue (backpressure)
@@ -192,6 +194,23 @@ class DDCConfig:
         if self.journal_limit < 1:
             raise ConfigError(
                 f"journal_limit must be >= 1, got {self.journal_limit}")
+        if self.agg_degree is not None:
+            if self.backend not in ("stream", "dist"):
+                raise ConfigError(
+                    f"agg_degree (the hierarchical aggregator tree, DESIGN "
+                    f"§13) only applies to the serving backends, got "
+                    f"backend={self.backend!r}; batch backends use "
+                    f"schedule='tree' + tree_degree instead")
+            if self.agg_degree < 2:
+                raise ConfigError(
+                    f"agg_degree must be >= 2 (a degree-1 tree is an "
+                    f"infinite chain of no-op folds), got {self.agg_degree}")
+            if self.agg_degree & (self.agg_degree - 1):
+                raise ConfigError(
+                    f"agg_degree must be a power of two, got "
+                    f"{self.agg_degree}: node caches patch dirty child rows "
+                    f"through pow2-padded updates, and a pow2 fan-in keeps "
+                    f"every level's jit compilation count bounded")
         if self.queue_depth < 1:
             raise ConfigError(
                 f"queue_depth must be >= 1, got {self.queue_depth}")

@@ -7,7 +7,8 @@ injection, the delta validation gate, and the write-ahead recovery log.
 query_tier.py is the high-QPS read path riding on top (DESIGN.md §12):
 immutable versioned snapshots published at refresh, coalesced batched
 queries with pow2 shape bucketing, and the QueryResult/ServiceStats
-API contract.
+API contract.  hierarchy.py is the tree-of-aggregators (DESIGN.md §13)
+both engines swap in for the flat aggregator when ``agg_degree`` is set.
 
 The cluster-service re-exports are lazy (PEP 562) so importing the LM
 engine does not drag in the whole clustering stack, and vice versa.
@@ -15,6 +16,7 @@ engine does not drag in the whole clustering stack, and vice versa.
 
 _CLUSTER_EXPORTS = ("ClusterService", "ShardControlPlane", "StreamConfig")
 _DIST_EXPORTS = ("DistClusterService",)
+_HIERARCHY_EXPORTS = ("AggregatorTree",)
 _QUERY_TIER_EXPORTS = ("QueryResult", "QueryTier", "QueueFull", "Snapshot",
                        "ServiceStats", "ServiceCounters", "ServiceGauges",
                        "route_snapshot")
@@ -31,6 +33,9 @@ def __getattr__(name):
     if name in _DIST_EXPORTS:
         from repro.serve import dist_service
         return getattr(dist_service, name)
+    if name in _HIERARCHY_EXPORTS:
+        from repro.serve import hierarchy
+        return getattr(hierarchy, name)
     if name in _QUERY_TIER_EXPORTS:
         from repro.serve import query_tier
         return getattr(query_tier, name)

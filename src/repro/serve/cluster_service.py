@@ -84,6 +84,7 @@ import numpy as np
 
 from repro.core import ddc
 from repro.serve import faults as faults_mod
+from repro.serve import hierarchy
 from repro.serve import journal as journal_mod
 from repro.serve import query_tier as qt
 
@@ -100,6 +101,7 @@ class StreamConfig:
     max_retries: int = 2            # delta re-deliveries per refresh
     retry_backoff: float = 0.0      # seconds; doubles per retry round
     journal_limit: int = 1024       # per-shard WAL entries before compaction
+    agg_degree: Optional[int] = None  # None: flat aggregator; >=2: tree fan-in
     ddc: ddc.DDCConfig = dataclasses.field(default_factory=ddc.DDCConfig)
 
 
@@ -256,6 +258,13 @@ class ShardControlPlane:
         self._pair_d2: Optional[jax.Array] = None
         self._global: Optional[ddc.ClusterSet] = None
         self._maps: Optional[jax.Array] = None
+        # Hierarchical aggregation (DESIGN.md §13): with ``agg_degree``
+        # set, the flat (K·C)² cache above stays None and the tree owns
+        # one small per-node cache per D children instead.
+        self._hier: Optional[hierarchy.AggregatorTree] = None
+        if scfg.agg_degree is not None:
+            self._hier = hierarchy.AggregatorTree(
+                k, scfg.agg_degree, self.cfg, meter=meter)
         self.refreshes = 0
         self.delta_refreshes = 0
         self.query_chunks = 0
@@ -458,21 +467,15 @@ class ShardControlPlane:
         """(K,) bool: shards whose ε-dilated live bbox could contain a
         neighbour of ANY row of ``q`` — every other shard provably holds
         no point within ε of any query, so skipping it cannot change a
-        single label (exactness).  The ε margin absorbs f32 rounding in
-        the distance kernel; counters feed ``stats()``.
+        single label (exactness).  The shared ``query_tier.bbox_route``
+        test (one ``ROUTE_EPS_DILATION`` margin absorbing f32 rounding in
+        the distance kernel) is what the snapshot path runs too, so the
+        two paths can never route a boundary query differently; counters
+        feed ``stats()``.
         """
         k = self.scfg.shards
-        q64 = np.asarray(q, np.float64).reshape(-1, 2)
-        eps = float(self.cfg.eps) * (1.0 + 1e-6)
-        scan = np.zeros((k,), bool)
-        for s in range(k):
-            box = self.shard_bbox(s)
-            if box is None:
-                continue
-            x0, y0, x1, y1 = box
-            dx = np.maximum(np.maximum(x0 - q64[:, 0], 0.0), q64[:, 0] - x1)
-            dy = np.maximum(np.maximum(y0 - q64[:, 1], 0.0), q64[:, 1] - y1)
-            scan[s] = bool(np.any(dx * dx + dy * dy <= eps * eps))
+        scan = qt.bbox_route(
+            tuple(self.shard_bbox(s) for s in range(k)), q, self.cfg.eps)
         # Quarantined shards are routed around: the answer is degraded
         # (their points can't label a query until recovery), flagged via
         # ``_route_degraded`` — but healthy shards keep serving.  The
@@ -505,6 +508,24 @@ class ShardControlPlane:
         k, c = self.scfg.shards, cfg.max_clusters
         bbytes = cfg.buffer_bytes()
         exclude = self._exclude_mask()
+        if self._hier is not None:
+            # Hierarchical aggregation (DESIGN.md §13): shard payloads go
+            # to their leaf aggregators; the tree meters its own internal
+            # summary/map edges and folds, so only the shard→leaf up-leg
+            # is accounted here (model or measured, same as flat).  The
+            # flat (K·C)² cache stays None by construction.
+            delta = mode == "delta" and self._hier.ready
+            self._global, self._maps = self._hier.refresh(
+                self._batch, dirty if delta else None, exclude)
+            if self.meter is not None:
+                if up_bytes is not None:
+                    self.meter.add_collective(1, up_bytes)
+                else:
+                    self.meter.add_collective(
+                        len(dirty) if delta else k, bbytes)
+            if delta:
+                self.delta_refreshes += 1
+            return
         if mode == "delta" and self._pair_d2 is not None:
             self._global, self._maps, self._pair_d2 = ddc.merge_delta(
                 self._batch, self._pair_d2, dirty, cfg, exclude)
@@ -875,6 +896,7 @@ class ShardControlPlane:
             "max_batch": self.scfg.max_batch,
             "max_queries": self.scfg.max_queries,
             "merge_mode": self.scfg.merge_mode,
+            "agg_degree": self.scfg.agg_degree,
             "head": list(self._head),
             "count": list(self._count),
             "dirty": sorted(self._dirty),
@@ -955,6 +977,29 @@ class ShardControlPlane:
         self._local = [jax.tree.map(lambda x, i=i: x[i], self._batch)
                        for i in range(k)]
 
+    def _restore_global(self, arrays: dict, manifest: dict) -> bool:
+        """Recompute global set + slot maps after ``_restore_batch``.
+
+        Flat mode replays the saved pair-d2 cache through
+        ``merge_from_d2``; hierarchical mode rebuilds every node cache
+        from scratch over the restored batch — bit-identical to the
+        pre-save tree by the per-node DESIGN §8 argument (delta-patched ≡
+        from-scratch), so nothing tree-shaped needs serialising.  Returns
+        False when the saved engine had no global state yet (callers skip
+        the label rebuild + publish)."""
+        if not manifest.get("has_global"):
+            return False
+        if self._hier is not None:
+            self._global, self._maps = self._hier.refresh(
+                self._batch, None, self._exclude_mask())
+            return True
+        if "pair_d2" not in arrays:
+            return False
+        self._pair_d2 = jnp.asarray(arrays["pair_d2"], jnp.float32)
+        self._global, self._maps = ddc.merge_from_d2(
+            self._batch, self._pair_d2, self.cfg, self._exclude_mask())
+        return True
+
     # -- introspection ------------------------------------------------------
 
     def n_live(self) -> int:
@@ -998,6 +1043,13 @@ class ShardControlPlane:
         buffer is donated to the next delta refresh, so handing out a
         reference would leave callers holding a deleted array."""
         return None if self._pair_d2 is None else jnp.array(self._pair_d2)
+
+    @property
+    def hierarchy(self) -> Optional[hierarchy.AggregatorTree]:
+        """The aggregator tree (None in flat mode).  In hierarchical mode
+        ``pair_d2`` is None by construction — the per-node caches are the
+        cache, reachable here for tests and the chaos sweep."""
+        return self._hier
 
     @property
     def global_set(self) -> Optional[ddc.ClusterSet]:
@@ -1198,10 +1250,7 @@ class ClusterService(ShardControlPlane):
         svc._dense = jnp.asarray(arrays["dense"], jnp.int32)
         svc._restore_mirrors(arrays, manifest)
         svc._restore_batch(arrays)
-        if manifest.get("has_global") and "pair_d2" in arrays:
-            svc._pair_d2 = jnp.asarray(arrays["pair_d2"], jnp.float32)
-            svc._global, svc._maps = ddc.merge_from_d2(
-                svc._batch, svc._pair_d2, svc.cfg, svc._exclude_mask())
+        if svc._restore_global(arrays, manifest):
             svc._glabels = _global_labels(
                 svc._dense, jnp.stack(svc._mask), svc._maps)
             # Restore ends with an eager publish, like refresh does: the

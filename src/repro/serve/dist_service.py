@@ -301,7 +301,12 @@ class DistClusterService(ShardControlPlane):
                     "sizes": row.sizes, "valid": row.valid,
                     "overflow": row.overflow}
 
-        if mode == "delta" and self._pair_d2 is not None:
+        # The cached aggregation that makes a delta fetch sufficient is
+        # the flat pair-d2 matrix OR the built hierarchy (whose per-node
+        # caches play the same role, DESIGN §13).
+        delta_ready = (self._hier.ready if self._hier is not None
+                       else self._pair_d2 is not None)
+        if mode == "delta" and delta_ready:
             payloads = {}
             if dirty:
                 rows = jax.device_get(jax.tree.map(
@@ -435,10 +440,7 @@ class DistClusterService(ShardControlPlane):
                 np.asarray(x),
                 NamedSharding(svc.mesh, P(AXIS, *([None] * (x.ndim - 1))))),
             svc._batch)
-        if manifest.get("has_global") and "pair_d2" in arrays:
-            svc._pair_d2 = jnp.asarray(arrays["pair_d2"], jnp.float32)
-            svc._global, svc._maps = ddc.merge_from_d2(
-                svc._batch, svc._pair_d2, svc.cfg, svc._exclude_mask())
+        if svc._restore_global(arrays, manifest):
             maps_dev = jax.device_put(
                 np.asarray(svc._maps, np.int32), svc._sh2)
             svc._glabels = svc._fns["labels"](svc._dense, svc._mask, maps_dev)

@@ -1,0 +1,352 @@
+"""Hierarchical tree-of-aggregators (DESIGN.md §13).
+
+The flat serve engines funnel every delta into ONE aggregator that owns
+the global ClusterSet and the full (K·C)² pair-d2 cache — the scaling
+ceiling past a few dozen shards (ROADMAP item 2; the paper's aggregation
+phase promises the opposite: "does not involve the exchange of large
+amounts of data").  `AggregatorTree` replaces it with a D-ary tree of
+small aggregators layered over the SAME core primitives:
+
+- every node owns a stacked (D, C, …) ClusterSet of its children's
+  summaries, a (D·C)² pair-d2 cache over only those slots, and the
+  folded C-slot summary it exports upward;
+- a node refresh IS `ddc.merge_delta` with node-local dirty child
+  positions and a node-local exclude mask — patch the dirty rows of the
+  node cache (`update_pair_d2_many`), refold (`merge_from_d2`);
+- a dirty shard patches its leaf node and propagates up the ancestor
+  path only; propagation stops the moment a node's exported summary is
+  bit-identical to what the parent already holds (absorption);
+- the root publishes the global set, and per-shard slot maps are
+  composed down the path (`x → parent_map[x]` per level, the
+  `merge_tree` idiom), then canonically relabeled so per-shard
+  ``glabels`` stay bit-identical to the flat aggregator.
+
+Exactness argument (why labels match the flat path bit-for-bit):
+
+1. Per node, the delta-patched cache equals a from-scratch
+   `contour_pair_d2_exact` of its batch (DESIGN §8 — same difference
+   form, IEEE-symmetric mirror), so each fold is independent of patch
+   history; `cache_exact()` asserts this.
+2. The flat fold labels a component by rank (member-count, descending)
+   with ties broken by the component's minimum flat slot index (the
+   min-label closure + stable argsort in `merge_from_d2`).  Component
+   member sets survive re-aggregation (the `merge_tree ≡ merge_sync`
+   equivalence the phase-2 suite asserts per layout), member counts are
+   exact integer sums in any association order, and the minimum flat
+   slot of a component is order-free — so re-ranking the ROOT's slots by
+   (size desc, min composed flat slot asc) reproduces the flat
+   aggregator's slot ids exactly.  That canonical relabel is the last
+   step of every refresh.
+
+Failure model (§11) composition: the engine's quarantine mask is applied
+at the LEAF fold only — an excluded shard's slots are treated invalid at
+its leaf node, the leaf's summary no longer carries them, and every
+ancestor refold is automatically quarantine-free.  The shard's cached
+rows in its leaf stay intact, so rejoin is one ordinary row patch, same
+as the flat engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ddc
+
+_BIG = np.iinfo(np.int32).max
+
+
+def _cs_equal(a: ddc.ClusterSet, b: ddc.ClusterSet) -> bool:
+    """Bitwise equality of two ClusterSets (host compare)."""
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(a, b))
+
+
+@dataclasses.dataclass
+class _Node:
+    """One aggregator in the tree.
+
+    ``children`` are shard ids at level 0 (the leaf-node level) and
+    previous-level node positions above it; the stacked ``batch`` is
+    padded with empty ClusterSets when a node has fewer than D children,
+    so every fold in the tree shares one (D, cfg) jit compilation.
+    """
+
+    children: List[int]
+    batch: ddc.ClusterSet
+    pair_d2: Optional[jax.Array] = None
+    summary: Optional[ddc.ClusterSet] = None
+    maps: Optional[jax.Array] = None          # (D, C) child slot → summary slot
+    to_root: Optional[np.ndarray] = None      # (C,) summary slot → root slot
+
+
+class AggregatorTree:
+    """A D-ary tree of delta-cached aggregators over K shards.
+
+    Host-driven like the flat control plane: `refresh(batch, dirty,
+    exclude)` takes the engine's (K, C, …) aggregator mirror, the list of
+    freshly staged shard ids (None = full rebuild of every node cache
+    from scratch), and the quarantine mask, and returns the
+    ``(global ClusterSet, (K, C) slot maps)`` pair in exactly the flat
+    aggregator's contract — callers cannot tell the topologies apart
+    except through the comm meter.
+    """
+
+    def __init__(self, shards: int, degree: int, cfg: ddc.DDCConfig,
+                 meter: Optional[ddc.CommMeter] = None):
+        if degree < 2:
+            raise ValueError(f"agg_degree must be >= 2, got {degree}")
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        self.shards = int(shards)
+        self.degree = int(degree)
+        self.cfg = cfg
+        self.meter = meter
+        self.levels: List[List[_Node]] = []
+        members = list(range(self.shards))
+        while True:
+            level = [
+                _Node(children=members[i:i + self.degree],
+                      batch=self._empty_batch())
+                for i in range(0, len(members), self.degree)
+            ]
+            self.levels.append(level)
+            if len(level) == 1:
+                break
+            members = list(range(len(level)))
+        self._last_exclude: Optional[np.ndarray] = None
+        self._global: Optional[ddc.ClusterSet] = None
+        self._maps: Optional[jax.Array] = None
+        self._prev_m: Optional[np.ndarray] = None
+        self.last_stats: dict = {}
+
+    # -- topology ----------------------------------------------------------
+
+    @property
+    def depth(self) -> int:
+        return len(self.levels)
+
+    @property
+    def n_nodes(self) -> int:
+        return sum(len(level) for level in self.levels)
+
+    @property
+    def internal_edges(self) -> int:
+        """Node→node edges (excludes the K shard→leaf edges)."""
+        return self.n_nodes - 1
+
+    @property
+    def ready(self) -> bool:
+        return self.levels[-1][0].summary is not None
+
+    def _empty_batch(self) -> ddc.ClusterSet:
+        empty = ddc.empty_clusterset(self.cfg)
+        return jax.tree.map(
+            lambda x: jnp.stack([x] * self.degree), empty)
+
+    # -- introspection (tests, chaos sweep) --------------------------------
+
+    def cache_arrays(self) -> List[np.ndarray]:
+        """Every built node cache, level order — the hierarchical
+        counterpart of the flat engine's ``pair_d2`` property."""
+        return [np.asarray(node.pair_d2)
+                for level in self.levels for node in level
+                if node.pair_d2 is not None]
+
+    def cache_exact(self) -> bool:
+        """True iff every node's delta-patched cache is bit-identical to
+        a from-scratch rebuild over its current batch — the per-node
+        DESIGN §8 invariant the whole exactness argument rests on."""
+        for level in self.levels:
+            for node in level:
+                if node.pair_d2 is None:
+                    continue
+                scratch = ddc.contour_pair_d2_exact(node.batch, self.cfg)
+                if not np.array_equal(np.asarray(node.pair_d2),
+                                      np.asarray(scratch)):
+                    return False
+        return True
+
+    # -- refresh -----------------------------------------------------------
+
+    def refresh(self, batch: ddc.ClusterSet, dirty=None, exclude=None
+                ) -> Tuple[ddc.ClusterSet, jax.Array]:
+        """Fold the engine mirror through the tree.
+
+        ``batch``: the (K, C, …) stacked per-shard ClusterSets (leaf
+        payloads are gathered from it row-by-row, so only dirty shards'
+        rows are ever read on the delta path).  ``dirty``: staged shard
+        ids, or None to rebuild every node cache from scratch.
+        ``exclude``: optional (K,) bool quarantine mask, honored at the
+        leaf fold (see module docstring).
+        """
+        cfg, d = self.cfg, self.degree
+        c = cfg.max_clusters
+        exclude_np = (None if exclude is None
+                      else np.asarray(exclude, bool).copy())
+        full = dirty is None or not self.ready
+        stats = {"folds": 0, "absorbed": 0, "up_shard_payloads": 0,
+                 "internal_up_edges": 0, "down_internal_edges": 0,
+                 "down_shard_rows": 0, "bottleneck_bytes": 0}
+        load: dict = {}
+        bbytes = cfg.buffer_bytes()
+
+        # Which leaf nodes must act, and which member slots changed.
+        pending: dict = {}
+        if full:
+            for ni, node in enumerate(self.levels[0]):
+                pending[ni] = set(range(len(node.children)))
+            stats["up_shard_payloads"] = self.shards
+        else:
+            for s in dirty:
+                pending.setdefault(int(s) // d, set()).add(int(s) % d)
+            stats["up_shard_payloads"] = len(set(int(s) for s in dirty))
+            # A quarantine flip without a staged delta still forces the
+            # affected leaf to refold (no cache patch — rows are intact).
+            prev = self._last_exclude
+            for ni, node in enumerate(self.levels[0]):
+                for s in node.children:
+                    was = bool(prev[s]) if prev is not None else False
+                    now = (bool(exclude_np[s])
+                           if exclude_np is not None else False)
+                    if was != now:
+                        pending.setdefault(ni, set())
+        self._last_exclude = exclude_np
+
+        any_changed = False
+        for li, level in enumerate(self.levels):
+            next_pending: dict = {}
+            for ni in sorted(pending):
+                node = level[ni]
+                positions = sorted(pending[ni])
+                if positions:
+                    if li == 0:
+                        src = [node.children[j] for j in positions]
+                        rows = jax.tree.map(
+                            lambda x: x[jnp.asarray(src)], batch)
+                        load[(li, ni)] = load.get((li, ni), 0) \
+                            + len(src) * bbytes
+                    else:
+                        kids = [self.levels[li - 1][node.children[j]].summary
+                                for j in positions]
+                        rows = jax.tree.map(
+                            lambda *xs: jnp.stack(xs), *kids)
+                    idx = jnp.asarray(positions, jnp.int32)
+                    node.batch = jax.tree.map(
+                        lambda b, r: b.at[idx].set(r), node.batch, rows)
+                excl = None
+                if li == 0 and exclude_np is not None:
+                    bits = np.zeros((d,), bool)
+                    for j, s in enumerate(node.children):
+                        bits[j] = exclude_np[s]
+                    if bits.any():
+                        excl = jnp.asarray(bits)
+                use_cache = not full and node.pair_d2 is not None
+                prev_summary, prev_maps = node.summary, node.maps
+                node.summary, node.maps, node.pair_d2 = ddc.merge_delta(
+                    node.batch,
+                    node.pair_d2 if use_cache else None,
+                    positions if use_cache else None,
+                    cfg, excl)
+                stats["folds"] += 1
+                if self.meter is not None:
+                    self.meter.add_merge(d, c)
+                summary_changed = (prev_summary is None
+                                   or not _cs_equal(prev_summary,
+                                                    node.summary))
+                maps_changed = (prev_maps is None
+                                or not np.array_equal(
+                                    np.asarray(prev_maps),
+                                    np.asarray(node.maps)))
+                any_changed = any_changed or summary_changed or maps_changed
+                if summary_changed and li + 1 < len(self.levels):
+                    next_pending.setdefault(ni // d, set()).add(ni % d)
+                    stats["internal_up_edges"] += 1
+                    load[(li, ni)] = load.get((li, ni), 0) + bbytes
+                    load[(li + 1, ni // d)] = \
+                        load.get((li + 1, ni // d), 0) + bbytes
+                    if self.meter is not None:
+                        self.meter.add_collective(1, bbytes)
+                elif not summary_changed:
+                    stats["absorbed"] += 1
+            pending = next_pending
+            if not pending and li + 1 < len(self.levels):
+                break
+
+        if any_changed or self._maps is None:
+            self._compose_down(stats, load)
+        stats["bottleneck_bytes"] = max(load.values(), default=0)
+        self.last_stats = stats
+        return self._global, self._maps
+
+    # -- down pass: map composition + canonical relabel --------------------
+
+    def _compose_down(self, stats: dict, load: dict) -> None:
+        cfg, d, k = self.cfg, self.degree, self.shards
+        c = cfg.max_clusters
+        root = self.levels[-1][0]
+        root.to_root = np.arange(c, dtype=np.int64)
+        for li in range(len(self.levels) - 1, 0, -1):
+            for ni, parent in enumerate(self.levels[li]):
+                pmaps = np.asarray(parent.maps, np.int64)
+                for j, child_pos in enumerate(parent.children):
+                    child = self.levels[li - 1][child_pos]
+                    m = pmaps[j]
+                    child.to_root = np.where(
+                        m >= 0, parent.to_root[np.clip(m, 0, c - 1)], -1)
+                    stats["down_internal_edges"] += 1
+                    load[(li, ni)] = load.get((li, ni), 0) + c * 4
+                    load[(li - 1, child_pos)] = \
+                        load.get((li - 1, child_pos), 0) + c * 4
+                    if self.meter is not None:
+                        self.meter.add_collective(1, c * 4)
+        m0 = np.full((k, c), -1, np.int64)
+        for ni, node in enumerate(self.levels[0]):
+            nmaps = np.asarray(node.maps, np.int64)
+            for j, s in enumerate(node.children):
+                m = nmaps[j]
+                m0[s] = np.where(
+                    m >= 0, node.to_root[np.clip(m, 0, c - 1)], -1)
+
+        # Canonical relabel: reproduce the flat aggregator's slot ids —
+        # rank root components by member count (desc), ties by the
+        # minimum composed flat slot index (the flat closure's min-label
+        # root, see module docstring).
+        sizes = np.asarray(root.summary.sizes, np.int64)
+        valid = np.asarray(root.summary.valid, bool)
+        rank = np.where(valid, sizes, -1)
+        flat0 = m0.reshape(-1)
+        first = np.full((c,), _BIG, np.int64)
+        sel = flat0 >= 0
+        np.minimum.at(first, flat0[sel], np.nonzero(sel)[0])
+        perm = np.lexsort((first, -rank))
+        relabel = np.full((c,), -1, np.int64)
+        for pos, r in enumerate(perm):
+            if rank[r] > 0:
+                relabel[r] = pos
+        m_final = np.where(
+            m0 >= 0, relabel[np.clip(m0, 0, c - 1)], -1).astype(np.int32)
+        if self._prev_m is not None:
+            stats["down_shard_rows"] = int(
+                (m_final != self._prev_m).any(axis=1).sum())
+        else:
+            stats["down_shard_rows"] = k
+        for ni, node in enumerate(self.levels[0]):
+            load[(0, ni)] = load.get((0, ni), 0) + len(node.children) * c * 4
+        self._prev_m = m_final
+
+        perm_j = jnp.asarray(perm, jnp.int32)
+        keep_j = jnp.asarray(rank[perm] > 0)
+        summary = root.summary
+        self._global = ddc.ClusterSet(
+            contours=summary.contours[perm_j],
+            counts=jnp.where(keep_j, summary.counts[perm_j], 0),
+            sizes=jnp.where(keep_j, summary.sizes[perm_j], 0),
+            valid=keep_j,
+            overflow=summary.overflow,
+        )
+        self._maps = jnp.asarray(m_final)

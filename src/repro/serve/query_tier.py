@@ -130,7 +130,11 @@ class QueryResult:
     def __ge__(self, other):
         return self.labels >= np.asarray(other)
 
-    __hash__ = None
+    # Defining __eq__ normally sets __hash__ = None (unhashable) — but the
+    # elementwise comparisons above are an ndarray shim, not value equality,
+    # so identity hashing is the right contract: callers may dedupe results
+    # in a set / key a dict on them (each submit() is a distinct result).
+    __hash__ = object.__hash__
 
     def __getattr__(self, name):
         # Fallback for ndarray attributes/methods (shape, tolist, all, …).
@@ -178,12 +182,50 @@ class Snapshot:
         return time.monotonic() - self.published_at
 
 
+# The one bbox-dilation constant shared by every routing path (the control
+# plane's synchronous ``_route``, the dist lanes' scan flags derived from it,
+# and ``route_snapshot`` below).  The 1e-6 relative slack absorbs the f32
+# round-trip of points through the ring buffers: a query exactly eps away
+# from a stored point must still scan that shard.  Duplicating the literal
+# per call-site is how the snapshot and sync paths drift apart — never
+# inline it again.
+ROUTE_EPS_DILATION = 1.0 + 1e-6
+
+
+def routing_eps(eps: float) -> float:
+    """The dilated routing radius used by every bbox scan test."""
+    return float(eps) * ROUTE_EPS_DILATION
+
+
+def bbox_route(bboxes, q: np.ndarray, eps: float) -> np.ndarray:
+    """(K,) bool scan flags: which shards' live bboxes could hold a point
+    within ``eps`` of ANY query in ``q``.  One float64 point-to-box
+    distance test against the ε-dilated radius — the single shared
+    implementation behind the sync control-plane route and the snapshot
+    route, so a boundary query can never be routed differently by path.
+
+    ``bboxes`` is a per-shard sequence of (x0, y0, x1, y1) or None (no
+    live rows → never scanned).
+    """
+    q64 = np.asarray(q, np.float64).reshape(-1, 2)
+    e = routing_eps(eps)
+    scan = np.zeros((len(bboxes),), bool)
+    for s, box in enumerate(bboxes):
+        if box is None:
+            continue
+        x0, y0, x1, y1 = box
+        dx = np.maximum(np.maximum(x0 - q64[:, 0], 0.0), q64[:, 0] - x1)
+        dy = np.maximum(np.maximum(y0 - q64[:, 1], 0.0), q64[:, 1] - y1)
+        scan[s] = bool(np.any(dx * dx + dy * dy <= e * e))
+    return scan
+
+
 def route_snapshot(snap: Snapshot, q: np.ndarray,
                    quarantined_now=frozenset()) -> Tuple[np.ndarray, bool]:
     """(scan (K,) bool, degraded): the snapshot edition of the control
-    plane's ``_route`` — same float64 bbox test, same ε·(1+1e-6)
-    dilation, so routing (and therefore labels) match the synchronous
-    path bit-for-bit on the same state.
+    plane's ``_route`` — literally the same ``bbox_route`` call (one
+    float64 test, one ``ROUTE_EPS_DILATION``), so routing (and therefore
+    labels) match the synchronous path bit-for-bit on the same state.
 
     ``degraded`` is raised when a quarantined shard could have mattered
     for THIS request: one quarantined at publish time (its rows were
@@ -192,17 +234,7 @@ def route_snapshot(snap: Snapshot, q: np.ndarray,
     and will be served stale).
     """
     k = snap.shards
-    q64 = np.asarray(q, np.float64).reshape(-1, 2)
-    eps = float(snap.eps) * (1.0 + 1e-6)
-    scan = np.zeros((k,), bool)
-    for s in range(k):
-        box = snap.bboxes[s]
-        if box is None:
-            continue
-        x0, y0, x1, y1 = box
-        dx = np.maximum(np.maximum(x0 - q64[:, 0], 0.0), q64[:, 0] - x1)
-        dy = np.maximum(np.maximum(y0 - q64[:, 1], 0.0), q64[:, 1] - y1)
-        scan[s] = bool(np.any(dx * dx + dy * dy <= eps * eps))
+    scan = bbox_route(snap.bboxes, q, snap.eps)
     degraded = False
     if snap.quarantined:
         qmask = np.zeros((k,), bool)

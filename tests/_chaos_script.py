@@ -39,30 +39,36 @@ SHARD_COUNTS = (2, 4, 8)
 BACKENDS = ("stream", "dist")
 
 
-def build(layout: str, k: int, backend: str, faults=None):
+def build(layout: str, k: int, backend: str, faults=None, agg=None):
     spec = spatial.PHASE2_LAYOUTS[layout]
     cap = spatial.shard_capacity(N, k)
     cfg = DDCConfig(
         eps=spec["eps"], min_pts=spec["min_pts"], grid=spec["grid"],
         max_clusters=spec["max_clusters"], max_verts=spec["max_verts"],
         backend=backend, shards=k, capacity=cap,
-        max_batch=min(BATCH, cap)).validate()
+        max_batch=min(BATCH, cap), agg_degree=agg).validate()
     return DDC(cfg, faults=faults)
 
 
 def assert_cache_clean(svc):
+    tree = svc.hierarchy
+    if tree is not None:
+        for i, arr in enumerate(tree.cache_arrays()):
+            assert np.isfinite(arr).all(), \
+                f"NaN/inf reached tree node cache {i}"
+        return
     d2 = svc.pair_d2
     if d2 is not None:
         assert np.isfinite(np.asarray(d2)).all(), \
             "NaN/inf reached the cached pair-d2 matrix"
 
 
-def chaos_one(layout: str, k: int, backend: str, seed: int):
+def chaos_one(layout: str, k: int, backend: str, seed: int, agg=None):
     plan = FaultPlan.random(seed=seed, shards=k, n_faults=3, horizon=2)
     spec = spatial.PHASE2_LAYOUTS[layout]
     pts = spec["make"](N)
-    faulted = build(layout, k, backend, faults=plan)
-    twin = build(layout, k, backend)
+    faulted = build(layout, k, backend, faults=plan, agg=agg)
+    twin = build(layout, k, backend, agg=agg)
     probes = pts[:: max(1, N // 32)].copy()
 
     for shard, chunk in spatial.stream_batches(pts, k, BATCH):
@@ -92,28 +98,40 @@ def chaos_one(layout: str, k: int, backend: str, seed: int):
     np.testing.assert_array_equal(
         faulted.labels_, twin.labels_,
         err_msg="post-recovery labels diverged from fault-free twin")
-    d2 = np.asarray(faulted.service.pair_d2)
-    np.testing.assert_array_equal(
-        d2, np.asarray(twin.service.pair_d2),
-        err_msg="post-recovery pair-d2 diverged from fault-free twin")
-    # and the delta-maintained cache still equals a from-scratch rebuild
-    faulted.service.remerge_full()
-    np.testing.assert_array_equal(
-        d2, np.asarray(faulted.service.pair_d2),
-        err_msg="post-recovery delta cache != full rebuild")
+    if agg is not None:
+        # Hierarchical arm: the per-node caches ARE the cache — each must
+        # equal a from-scratch rebuild of its node batch, and a full tree
+        # rebuild must reproduce the same labels.
+        assert faulted.service.hierarchy.cache_exact(), \
+            "post-recovery node cache != scratch rebuild"
+        faulted.service.remerge_full()
+        np.testing.assert_array_equal(
+            faulted.labels_, twin.labels_,
+            err_msg="post-recovery full tree rebuild diverged")
+    else:
+        d2 = np.asarray(faulted.service.pair_d2)
+        np.testing.assert_array_equal(
+            d2, np.asarray(twin.service.pair_d2),
+            err_msg="post-recovery pair-d2 diverged from fault-free twin")
+        # the delta-maintained cache still equals a from-scratch rebuild
+        faulted.service.remerge_full()
+        np.testing.assert_array_equal(
+            d2, np.asarray(faulted.service.pair_d2),
+            err_msg="post-recovery delta cache != full rebuild")
 
     st_ = faulted.service.stats()
-    print(f"PASS {layout} {backend} k={k} seed={seed} "
-          f"quarantines={st_['quarantined_shards']} retries={st_['retries']} "
-          f"fenced={st_['fenced_deltas']}")
+    print(f"PASS {layout} {backend}{' hier' if agg else ''} k={k} "
+          f"seed={seed} quarantines={st_['quarantined_shards']} "
+          f"retries={st_['retries']} fenced={st_['fenced_deltas']}")
 
 
 def sweep(layouts, seeds):
     for layout in layouts:
         for k in SHARD_COUNTS:
             for backend in BACKENDS:
-                for seed in seeds:
-                    chaos_one(layout, k, backend, seed)
+                for agg in (None, 2):     # flat + hierarchical aggregator
+                    for seed in seeds:
+                        chaos_one(layout, k, backend, seed, agg=agg)
 
 
 def sweep_hypothesis(layouts):
@@ -125,9 +143,10 @@ def sweep_hypothesis(layouts):
     @given(seed=st.integers(0, 2**31 - 1),
            k=st.sampled_from(SHARD_COUNTS),
            backend=st.sampled_from(BACKENDS),
+           agg=st.sampled_from((None, 2, 4)),
            layout=st.sampled_from(tuple(layouts)))
-    def run(seed, k, backend, layout):
-        chaos_one(layout, k, backend, seed)
+    def run(seed, k, backend, agg, layout):
+        chaos_one(layout, k, backend, seed, agg=agg)
 
     run()
 

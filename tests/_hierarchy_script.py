@@ -1,0 +1,79 @@
+"""Hierarchical≡flat cells for the DEVICE-RESIDENT serve engine, run
+under a 16-device CPU override by tests/test_hierarchy.py (the dist
+data plane lays one shard per mesh device, and the sweep goes to 16
+shards).
+
+Each cell streams the same ingest schedule into a flat dist service and
+an ``agg_degree`` twin, refreshing after every batch, then asserts the
+§13 contract: per-shard global labels and slot maps bit-identical,
+per-node caches equal to a from-scratch rebuild, the flat pair-d2 cache
+absent in tree mode, and the delta path actually taken.
+
+Modes (argv[1]): ``quick`` (two cells, tier-1) or ``all`` (every tuned
+layout × {4, 8, 16} shards × degree {2, 4}).  Prints PASS lines; any
+exception fails.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+
+import numpy as np
+
+from repro.data import spatial
+from repro.ddc import DDC, DDCConfig
+
+N = 1024
+BATCH = 128
+
+
+def build(layout: str, k: int, degree=None) -> DDC:
+    spec = spatial.PHASE2_LAYOUTS[layout]
+    cap = spatial.shard_capacity(N, k)
+    cfg = DDCConfig(
+        eps=spec["eps"], min_pts=spec["min_pts"], grid=spec["grid"],
+        max_clusters=spec["max_clusters"], max_verts=spec["max_verts"],
+        backend="dist", shards=k, capacity=cap,
+        max_batch=min(BATCH, cap), agg_degree=degree).validate()
+    return DDC(cfg)
+
+
+def one(layout: str, k: int, degree: int):
+    spec = spatial.PHASE2_LAYOUTS[layout]
+    pts = spec["make"](N)
+    flat, hier = build(layout, k), build(layout, k, degree)
+    for shard, chunk in spatial.stream_batches(pts, k, BATCH):
+        for model in (flat, hier):
+            model.partial_fit(shard, chunk)
+            model.service.refresh()
+
+    np.testing.assert_array_equal(
+        hier.labels_, flat.labels_,
+        err_msg=f"{layout} k={k} d={degree}: labels diverged from flat")
+    np.testing.assert_array_equal(
+        np.asarray(hier.service._maps), np.asarray(flat.service._maps),
+        err_msg=f"{layout} k={k} d={degree}: slot maps diverged from flat")
+    tree = hier.service.hierarchy
+    assert tree is not None and tree.ready
+    assert hier.service.pair_d2 is None, "flat cache alive in tree mode"
+    assert tree.cache_exact(), "a node cache diverged from scratch rebuild"
+    assert hier.service.delta_refreshes > 0, "tree never took the delta path"
+    print(f"PASS {layout} k={k} d={degree} depth={tree.depth} "
+          f"nodes={tree.n_nodes} deltas={hier.service.delta_refreshes}")
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "quick"
+    if which == "quick":
+        one("linked_ovals", 4, 2)
+        one("rings", 8, 4)
+    elif which == "all":
+        for layout in sorted(spatial.PHASE2_LAYOUTS):
+            for k in (4, 8, 16):
+                for degree in (2, 4):
+                    one(layout, k, degree)
+    else:
+        for k in (4, 8, 16):
+            for degree in (2, 4):
+                one(which, k, degree)
+    print("ALL_OK")

@@ -30,10 +30,11 @@ def run_script(arg: str) -> str:
 
 
 def test_chaos_quick():
-    """One layout, both engines, 2/4/8 shards, fixed seed: no plan
-    corrupts the pair-d2 cache; recovery is bit-exact vs the twin."""
+    """One layout, both engines, flat + hierarchical aggregator, 2/4/8
+    shards, fixed seed: no plan corrupts the pair-d2 cache (or a tree
+    node cache); recovery is bit-exact vs the twin."""
     out = run_script("quick")
-    assert "ALL_OK" in out and out.count("PASS") == 6
+    assert "ALL_OK" in out and out.count("PASS") == 12
 
 
 @pytest.mark.slow

@@ -102,6 +102,60 @@ class TestQueryResultShim:
         out, stale = svc.query(pts[:8], return_stale=True)
         assert isinstance(out, QueryResult) and stale is False
 
+    def test_hashable_identity(self):
+        """Regression: defining the ndarray-shim ``__eq__`` without
+        ``__hash__`` made Python set ``__hash__ = None``, so any caller
+        deduping results in a set (or keying a dict on them) got
+        ``TypeError: unhashable type``.  The comparisons are elementwise
+        shims, not value equality, so the contract is identity hashing."""
+        model, pts = fitted_host()
+        res = model.query(pts[:4])
+        assert hash(res) == object.__hash__(res)
+        assert res in {res}
+        assert {res: "hit"}[res] == "hit"
+
+
+class TestSharedRouting:
+    """Satellite regression: the ε·(1+1e-6) bbox dilation lives in ONE
+    helper (``routing_eps``/``bbox_route``) used by the sync control
+    plane, the dist lane scan flags, and the snapshot router — a
+    boundary query must never be routed differently by path."""
+
+    def test_dilation_single_source(self):
+        assert qt.routing_eps(1.0) == qt.ROUTE_EPS_DILATION
+        assert qt.routing_eps(0.25) == 0.25 * qt.ROUTE_EPS_DILATION
+
+    def test_exact_eps_boundary_is_scanned(self):
+        """A query exactly ε beyond a bbox edge sits on the routing
+        knife-edge — the dilation exists precisely so it still scans."""
+        bboxes = [(0.2, 0.2, 0.4, 0.4), None]
+        eps = 0.05
+        on_edge = np.array([[0.4 + eps, 0.3]])
+        scan = qt.bbox_route(bboxes, on_edge, eps)
+        assert scan.tolist() == [True, False]
+        beyond = np.array([[0.4 + eps * (1 + 2e-6), 0.3]])
+        assert qt.bbox_route(bboxes, beyond, eps).tolist() == [False, False]
+
+    def test_boundary_points_route_identically_sync_vs_snapshot(self):
+        svc, pts, spec = streamed_service("rings", 4)
+        snap = svc.snapshot()
+        eps = float(spec["eps"])
+        probes = []
+        for s in range(4):
+            box = svc.shard_bbox(s)
+            if box is None:
+                continue
+            x0, y0, x1, y1 = box
+            for d in (eps, eps * (1 + 5e-7), eps * (1 + 2e-6), 2 * eps):
+                probes += [[x1 + d, (y0 + y1) / 2],
+                           [(x0 + x1) / 2, y0 - d],
+                           [x0 - d, y1 + d]]
+        for row in np.asarray(probes, np.float64):
+            chunk = row[None].astype(np.float32)
+            sync_scan = svc._route(chunk)
+            snap_scan, _ = qt.route_snapshot(snap, chunk)
+            np.testing.assert_array_equal(sync_scan, snap_scan)
+
 
 class TestSnapshotVersioning:
     def test_version_monotonic_over_refreshes(self):
