@@ -328,6 +328,68 @@ def check_recovery(doc: dict):
              "recovery.summary: all_recovered_bitexact is not true")
 
 
+def check_tracking(doc: dict):
+    _require(doc.get("schema") == "tracking-bench/v1",
+             f"tracking: bad schema tag {doc.get('schema')!r}")
+    smoke = bool(doc.get("smoke", False))
+    rows = _typed(doc, "rows", list, "tracking")
+    _require(len(rows) > 0, "tracking: rows is empty")
+    layouts = _typed(doc, "layouts", dict, "tracking")
+    _require(len(layouts) >= 3, "tracking: fewer than 3 trajectory layouts")
+    _require(doc.get("backend") == "stream",
+             f"tracking: backend tag {doc.get('backend')!r} != 'stream'")
+    seen_layouts, seen_blobs, max_k = set(), set(), 0
+    for i, row in enumerate(rows):
+        ctx = f"tracking.rows[{i}]"
+        kind = _typed(row, "kind", str, ctx)
+        _require(kind in ("layout", "scaling"), f"{ctx}: bad kind {kind!r}")
+        layout = _typed(row, "layout", str, ctx)
+        _require(layout in layouts, f"{ctx}: unknown layout {layout!r}")
+        k = _typed(row, "shards", int, ctx)
+        _require(k >= 2, f"{ctx}: shards < 2")
+        _require(_typed(row, "generations", int, ctx) >= 2,
+                 f"{ctx}: fewer than 2 tracked generations")
+        _require(_typed(row, "births", int, ctx) >= 1, f"{ctx}: no births")
+        for key in ("deaths", "merges", "splits", "continuations"):
+            _require(_typed(row, key, int, ctx) >= 0, f"{ctx}: {key} < 0")
+        _require(_typed(row, "n_clusters", int, ctx) >= 1,
+                 f"{ctx}: no live clusters at end of run")
+        _require(_typed(row, "tracks_total", int, ctx) >= row["births"],
+                 f"{ctx}: fewer IDs issued than birth events — IDs reused")
+        stab = _typed(row, "id_stability", (int, float), ctx)
+        _require(0.0 <= stab <= 1.0,
+                 f"{ctx}: id_stability {stab} not in [0,1]")
+        _require(_typed(row, "match_ms_mean", (int, float), ctx) > 0,
+                 f"{ctx}: match_ms_mean <= 0")
+        if kind == "layout":
+            seen_layouts.add(layout)
+            max_k = max(max_k, k)
+            if layout == "drifting_blobs":
+                # The acceptance gate: stable IDs on the layout built to
+                # have none of the churn excuses.
+                _require(stab >= 0.95,
+                         f"{ctx}: drifting_blobs id_stability {stab} < 0.95")
+            if layout == "merging_crowds":
+                _require(row["merges"] >= 1 and row["splits"] >= 1,
+                         f"{ctx}: merging_crowds produced no merge/split")
+        else:
+            seen_blobs.add(_typed(row, "n_blobs", int, ctx))
+    _require(seen_layouts >= set(layouts),
+             f"tracking: layout rows missing {set(layouts) - seen_layouts}")
+    _require(len(seen_blobs) >= 2,
+             "tracking: scaling sweep covers < 2 cluster counts")
+    if not smoke:
+        _require(max_k >= 8, "tracking: layout sweep never reaches 8 shards")
+        _require(max(seen_blobs) >= 8,
+                 "tracking: scaling sweep never reaches 8 blobs")
+    summary = _typed(doc, "summary", dict, "tracking")
+    _require(summary.get("stability_gate") is True,
+             "tracking.summary: stability_gate is not true")
+    _require(_typed(summary, "drifting_stability_min", (int, float),
+                    "tracking.summary") >= 0.95,
+             "tracking.summary: drifting_blobs ID stability below 0.95")
+
+
 def check_file(path: str):
     with open(path) as f:
         doc = json.load(f)
@@ -343,6 +405,9 @@ def check_file(path: str):
     if doc.get("schema") == "hierarchy-bench/v1":
         check_hierarchy(doc)
         return "hierarchy"
+    if doc.get("schema") == "tracking-bench/v1":
+        check_tracking(doc)
+        return "tracking"
     if "bt" in doc:
         check_phase1(doc)
         return "phase1"

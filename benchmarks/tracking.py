@@ -1,0 +1,218 @@
+"""Cluster-tracking benchmark (DESIGN.md §14) — match latency, lifecycle
+event counts, and ID stability of the ``ClusterTracker`` fold over the
+streaming serve stack.
+
+Two arms, both on the stream backend with ``track=True``:
+
+* **layout** — every ``TRAJECTORY_LAYOUTS`` trajectory × {2, 4, 8}
+  shards (smoke: 2 only) is played frame-by-frame (one tracked refresh
+  per frame, sliding-window eviction), recording the per-refresh match
+  latency (``ClusterTracker.last_update_ms``), the full lifecycle event
+  census, and the **ID-stability rate**::
+
+      continuations / (continuations + late_births + deaths
+                       + merges + splits)
+
+  i.e. the fraction of track transitions that kept an existing identity
+  (first-generation births are the unavoidable cold start and are
+  excluded).  On ``drifting_blobs`` — non-interacting groups by
+  construction — stability below 0.95 HARD-FAILS the benchmark: a
+  tracker that churns IDs on the easy layout is broken.
+
+* **scaling** — match latency vs #clusters: drifting-blob streams with
+  2/4/8 blobs in well-separated lanes (radius and eps shrunk so even 8
+  lanes clear the merge radius), ``max_clusters`` scaled with the blob
+  count so the (K·C) matching batch genuinely grows.  The mean excludes
+  the first two generations (generation 1 is the all-births cold start
+  and never matches; generation 2 pays the one-time jit compile of the
+  match kernel).
+
+Writes ``BENCH_tracking.json`` (schema ``tracking-bench/v1``,
+``benchmarks/check_bench.py``).  ``--smoke`` trims both sweeps for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _parse_args(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny CI subset: 2 shards, 2/4-blob scaling only")
+    p.add_argument("--out", default=None, help="output JSON path")
+    return p.parse_args(argv)
+
+
+_ARGS = None
+if __name__ == "__main__":
+    _ARGS = _parse_args()
+
+import numpy as np                                    # noqa: E402
+
+from repro.data import spatial                        # noqa: E402
+from repro.ddc import DDC, DDCConfig                  # noqa: E402
+
+SHARDS_FULL = (2, 4, 8)
+SHARDS_SMOKE = (2,)
+SCALING_BLOBS_FULL = (2, 4, 8)
+SCALING_BLOBS_SMOKE = (2, 4)
+STABILITY_FLOOR = 0.95
+# The scaling arm's geometry: 8 lanes on [0.2, 0.8] sit 0.086 apart, so
+# blob radius and eps must keep the inter-lane gap above the merge
+# radius (eps + 1.5/grid = 0.031) — otherwise lane crossings would read
+# as merge/split churn and the latency rows would measure the wrong
+# regime.
+SCALING = dict(eps=0.015, min_pts=3, grid=96, max_verts=96,
+               steps=16, window=4, radius=0.02, speed=0.01,
+               per_blob=24, shards=4)
+
+
+def build(spec: dict, k: int, n_per_step: int, max_clusters: int) -> DDC:
+    cap = spatial.trajectory_capacity(n_per_step, spec["window"], k)
+    cfg = DDCConfig(
+        eps=spec["eps"], min_pts=spec["min_pts"], grid=spec["grid"],
+        max_clusters=max_clusters, max_verts=spec["max_verts"],
+        backend="stream", shards=k, capacity=cap,
+        max_batch=min(256, cap), track=True).validate()
+    return DDC(cfg)
+
+
+def play_timed(model: DDC, frames, window: int):
+    """One tracked refresh per frame with sliding-window eviction,
+    recording the tracker's per-refresh match latency."""
+    k = model.config.shards
+    tracker = model.service.tracker
+    match_ms = []
+    for step, frame in enumerate(frames):
+        for shard, part in enumerate(np.array_split(frame, k)):
+            if len(part):
+                model.partial_fit(shard, part,
+                                  t=float(step) * np.ones(len(part)))
+        if step + 1 > window:
+            model.expire(float(step - window + 1))
+        model.service.refresh()
+        match_ms.append(tracker.last_update_ms)
+    return model.tracks(), match_ms
+
+
+def stability(snap) -> float:
+    """Fraction of track transitions that kept an existing identity.
+    Generation-1 births are the cold start, not churn."""
+    late_births = sum(1 for e in snap.events
+                      if e.kind == "birth" and e.gen > 1)
+    churn = late_births + snap.deaths + snap.merges + snap.splits
+    denom = snap.continuations + churn
+    return 1.0 if denom == 0 else snap.continuations / denom
+
+
+def bench_row(kind: str, layout: str, spec: dict, frames, k: int,
+              n_per_step: int, max_clusters: int, n_blobs: int) -> dict:
+    model = build(spec, k, n_per_step, max_clusters)
+    t0 = time.perf_counter()
+    snap, match_ms = play_timed(model, frames, spec["window"])
+    play_ms = (time.perf_counter() - t0) * 1e3
+    # Generation 1 never matches (all-births cold start) and generation
+    # 2 pays the one-time match-kernel compile — the steady mean starts
+    # at generation 3.
+    steady = match_ms[2:]
+    return {
+        "kind": kind,
+        "layout": layout,
+        "shards": k,
+        "n_blobs": n_blobs,
+        "generations": snap.generation,
+        "n_clusters": len(snap.alive),
+        "tracks_total": snap.next_track_id,
+        "births": snap.births,
+        "deaths": snap.deaths,
+        "merges": snap.merges,
+        "splits": snap.splits,
+        "continuations": snap.continuations,
+        "id_stability": round(stability(snap), 4),
+        "match_ms_mean": round(float(np.mean(steady)), 3),
+        "match_ms_last": round(match_ms[-1], 3),
+        "play_ms": round(play_ms, 1),
+    }
+
+
+def run(smoke: bool = False, out_path: str | None = None,
+        print_rows: bool = True):
+    shards = SHARDS_SMOKE if smoke else SHARDS_FULL
+    blobs = SCALING_BLOBS_SMOKE if smoke else SCALING_BLOBS_FULL
+    rows = []
+
+    for layout in sorted(spatial.TRAJECTORY_LAYOUTS):
+        spec = spatial.TRAJECTORY_LAYOUTS[layout]
+        traj = spec["make"](steps=spec["steps"],
+                            n_per_step=spec["n_per_step"])
+        for k in shards:
+            row = bench_row("layout", layout, spec, traj.frames, k,
+                            spec["n_per_step"], spec["max_clusters"],
+                            n_blobs=traj.centers.shape[1])
+            rows.append(row)
+            if print_rows:
+                print(f"track_{layout}_k{k}: stability="
+                      f"{row['id_stability']} match="
+                      f"{row['match_ms_mean']}ms events="
+                      f"b{row['births']}/d{row['deaths']}/"
+                      f"m{row['merges']}/s{row['splits']}/"
+                      f"c{row['continuations']}")
+
+    for b in blobs:
+        n_per_step = SCALING["per_blob"] * b
+        traj = spatial.make_drifting_blobs(
+            steps=SCALING["steps"], n_per_step=n_per_step, n_blobs=b,
+            seed=0, speed=SCALING["speed"], radius=SCALING["radius"])
+        row = bench_row("scaling", "drifting_blobs", SCALING, traj.frames,
+                        SCALING["shards"], n_per_step,
+                        max_clusters=b + 4, n_blobs=b)
+        rows.append(row)
+        if print_rows:
+            print(f"track_scaling_b{b}: clusters={row['n_clusters']} "
+                  f"match={row['match_ms_mean']}ms "
+                  f"stability={row['id_stability']}")
+
+    drifting = [r for r in rows
+                if r["kind"] == "layout" and r["layout"] == "drifting_blobs"]
+    drifting_min = min(r["id_stability"] for r in drifting)
+    summary = {
+        "stability_floor": STABILITY_FLOOR,
+        "drifting_stability_min": drifting_min,
+        "stability_gate": drifting_min >= STABILITY_FLOOR,
+        "n_layouts": len({r["layout"] for r in rows if r["kind"] == "layout"}),
+        "max_shards": max(shards),
+        "max_scaling_blobs": max(blobs),
+        "mean_match_ms": round(float(np.mean(
+            [r["match_ms_mean"] for r in rows])), 3),
+    }
+    out = {
+        "schema": "tracking-bench/v1",
+        "smoke": bool(smoke),
+        "backend": "stream",
+        "layouts": {name: {k: v for k, v in spec.items() if k != "make"}
+                    for name, spec in spatial.TRAJECTORY_LAYOUTS.items()},
+        "scaling": {k: v for k, v in SCALING.items()},
+        "rows": rows,
+        "summary": summary,
+    }
+    if out_path is None:
+        out_path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_tracking.json")
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+    if print_rows:
+        print("summary:", json.dumps(summary))
+        print("wrote", out_path)
+    if not summary["stability_gate"]:
+        print(f"TRACKING BENCH FAILED: drifting_blobs ID stability "
+              f"{drifting_min} < {STABILITY_FLOOR}", file=sys.stderr)
+        raise SystemExit(1)
+    return rows
+
+
+if __name__ == "__main__":
+    run(smoke=_ARGS.smoke, out_path=_ARGS.out)

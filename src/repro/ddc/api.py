@@ -85,6 +85,17 @@ class DDC:
         shards (stream/dist backends only).  Returns the eviction count."""
         return self.backend.expire(t)
 
+    def tracks(self):
+        """The cluster-tracking read view (DESIGN.md §14): the
+        ``repro.serve.TrackSnapshot`` published alongside the query
+        tier's versioned ``Snapshot`` — same version, so pairing
+        ``labels_``/``query`` reads with ``tracks()`` observes one
+        consistent generation.  Stream/dist backends with
+        ``track=True`` only; folds pending writes first (like
+        ``read_snapshot``), and returns None before anything is
+        ingested."""
+        return self.backend.tracks()
+
     # -- read path ---------------------------------------------------------
 
     @property

@@ -102,6 +102,14 @@ class Backend:
             f"TTL eviction needs a streaming backend ('stream' or "
             f"'dist'), not {self.name!r}")
 
+    def tracks(self):
+        """The last published ``TrackSnapshot`` (DESIGN.md §14)."""
+        raise ConfigError(
+            f"cluster tracking needs a streaming backend ('stream' or "
+            f"'dist') with track=True, not {self.name!r}: tracking is a "
+            f"fold over refresh generations, and the batch backends "
+            f"have none")
+
     # read path
     def labels(self) -> np.ndarray:
         raise NotImplementedError
@@ -482,6 +490,9 @@ class StreamBackend(Backend):
             retry_backoff=self.cfg.retry_backoff,
             journal_limit=self.cfg.journal_limit,
             agg_degree=self.cfg.agg_degree,
+            track=self.cfg.track,
+            track_history=self.cfg.track_history,
+            match_min_overlap=self.cfg.match_min_overlap,
             ddc=self.cfg.core())
 
     def _build(self, capacity: int):
@@ -506,6 +517,17 @@ class StreamBackend(Backend):
     def expire(self, t: float) -> int:
         return sum(self.service.evict_older_than(s, t)
                    for s in range(self.cfg.shards))
+
+    def tracks(self):
+        if not self.cfg.track:
+            raise ConfigError(
+                "cluster tracking is disabled for this model; construct "
+                "with DDCConfig(track=True, backend='stream'|'dist') to "
+                "assign stable track IDs at refresh")
+        # Freshness-seeking like read_snapshot: fold pending writes so
+        # the returned TrackSnapshot reflects everything ingested.
+        self.service.read_snapshot()
+        return self.service.track_snapshot()
 
     def labels(self) -> np.ndarray:
         _, _, labels = self.service.live()
@@ -573,6 +595,11 @@ class StreamBackend(Backend):
             journal_limit=int(manifest.get("journal_limit",
                                            self.cfg.journal_limit)),
             agg_degree=manifest.get("agg_degree", self.cfg.agg_degree),
+            track=bool(manifest.get("track", self.cfg.track)),
+            track_history=int(manifest.get("track_history",
+                                           self.cfg.track_history)),
+            match_min_overlap=float(manifest.get("match_min_overlap",
+                                                 self.cfg.match_min_overlap)),
             ddc=self.cfg.core())
         self._svc = self._svc_cls().from_state(
             scfg, arrays, manifest, meter=self.meter, faults=self.faults)

@@ -68,6 +68,12 @@ class DDCConfig:
     agg_degree: Optional[int] = None  # None: flat aggregator; >=2: the
     #                                  DESIGN §13 tree-of-aggregators fan-in
 
+    # Cluster tracking knobs (DESIGN.md §14; stream/dist backends).
+    track: bool = False              # fold stable track IDs at refresh
+    track_history: int = 16          # per-track motion-history ring length
+    match_min_overlap: float = 0.0   # tighten the match gate: d2 <=
+    #                                  r²·(1-overlap), r = merge radius
+
     # Query-tier knobs (DESIGN.md §12; all backends).
     queue_depth: int = 64            # bounded request queue (backpressure)
     query_bucket_min: int = 16       # smallest pow2 query-width bucket
@@ -211,6 +217,21 @@ class DDCConfig:
                     f"{self.agg_degree}: node caches patch dirty child rows "
                     f"through pow2-padded updates, and a pow2 fan-in keeps "
                     f"every level's jit compilation count bounded")
+        if self.track and self.backend not in ("stream", "dist"):
+            raise ConfigError(
+                f"track=True (the cluster tracking subsystem, DESIGN §14) "
+                f"needs a streaming backend ('stream' or 'dist'), got "
+                f"backend={self.backend!r}: tracking is a fold over refresh "
+                f"generations, and the batch backends have none")
+        if self.track_history < 2:
+            raise ConfigError(
+                f"track_history must be >= 2 (velocity needs two history "
+                f"samples), got {self.track_history}")
+        if not 0.0 <= self.match_min_overlap < 1.0:
+            raise ConfigError(
+                f"match_min_overlap must be in [0, 1) (1 would demand "
+                f"exactly-zero contour distance), got "
+                f"{self.match_min_overlap}")
         if self.queue_depth < 1:
             raise ConfigError(
                 f"queue_depth must be >= 1, got {self.queue_depth}")

@@ -6,6 +6,12 @@ Two modes behind one entry point:
 * ``--mode ddc`` — the streaming spatial-clustering service: ingest a
   synthetic layout shard-by-shard with an incremental delta-merge
   refresh after every batch, then serve point->cluster queries.
+* ``--mode track`` — the cluster-tracking subsystem (DESIGN.md §14):
+  play a seeded trajectory stream (``--layout`` from
+  ``TRAJECTORY_LAYOUTS``, default ``drifting_blobs``) through a
+  ``track=True`` deployment with sliding-window eviction, then print
+  the per-track IDs, velocities/headings, motion classes, and the
+  lifecycle-event census as a JSON line.
   ``--backend stream`` (default) is the host-driven engine
   (serve/cluster_service.py); ``--backend dist`` pins each shard's
   buffers to its own mesh device (serve/dist_service.py) so the printed
@@ -27,6 +33,8 @@ CPU-scale examples:
       --shards 8 --queries 512
   PYTHONPATH=src python -m repro.launch.serve --mode ddc --backend dist \
       --shards 8 --qps-requests 64 --deadline-ms 50
+  PYTHONPATH=src python -m repro.launch.serve --mode track \
+      --layout merging_crowds --shards 4
 """
 from __future__ import annotations
 
@@ -60,7 +68,7 @@ import numpy as np
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=("lm", "ddc"), default="lm")
+    ap.add_argument("--mode", choices=("lm", "ddc", "track"), default="lm")
     # LM mode
     ap.add_argument("--arch")
     ap.add_argument("--tiny", action="store_true")
@@ -72,7 +80,9 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     # DDC streaming mode
     ap.add_argument("--layout", default="rings",
-                    help="a data/spatial.py PHASE2_LAYOUTS name")
+                    help="a data/spatial.py PHASE2_LAYOUTS name (--mode "
+                         "ddc) or TRAJECTORY_LAYOUTS name (--mode track, "
+                         "default drifting_blobs)")
     ap.add_argument("--backend", choices=("stream", "dist"),
                     default=DEF_BACKEND,
                     help="host-driven or device-resident serve engine")
@@ -100,9 +110,15 @@ def main(argv=None):
     ap.add_argument("--deadline-ms", type=float, default=0.0,
                     help="per-request deadline; misses are counted (and "
                          "still answered) (0: no deadline)")
+    # DDC tracking mode (DESIGN.md §14)
+    ap.add_argument("--steps", type=int, default=0,
+                    help="trajectory frames to play (--mode track; "
+                         "0: the layout's default)")
     args = ap.parse_args(argv)
     if args.mode == "ddc":
         return serve_ddc(args)
+    if args.mode == "track":
+        return serve_track(args)
     if not args.arch:
         ap.error("--arch is required for --mode lm")
     return serve_lm(args)
@@ -186,6 +202,69 @@ def serve_ddc(args):
     if args.fault_seed is not None:
         out["fault_seed"] = args.fault_seed
         out["recovered_shards"] = recovered
+    print(json.dumps(out))
+    return out
+
+
+def serve_track(args):
+    """The cluster-tracking driver (DESIGN.md §14): play a seeded
+    trajectory stream through a ``track=True`` deployment — one tracked
+    refresh per frame, sliding-window eviction — then print the live
+    tracks (ID, velocity, heading, motion class) and the lifecycle
+    event census as one JSON line."""
+    from repro.data import spatial
+    from repro.ddc import DDC, DDCConfig
+    from repro.serve import tracking
+
+    layout = args.layout
+    if layout not in spatial.TRAJECTORY_LAYOUTS:
+        if layout != "rings":      # the --mode ddc default, not a choice
+            raise SystemExit(
+                f"--mode track needs a TRAJECTORY_LAYOUTS name "
+                f"{sorted(spatial.TRAJECTORY_LAYOUTS)}, got {layout!r}")
+        layout = "drifting_blobs"
+    spec = spatial.TRAJECTORY_LAYOUTS[layout]
+    steps = args.steps or spec["steps"]
+    traj = spec["make"](steps=steps, n_per_step=spec["n_per_step"])
+    cap = spatial.trajectory_capacity(
+        spec["n_per_step"], spec["window"], args.shards)
+    cfg = DDCConfig(
+        eps=spec["eps"], min_pts=spec["min_pts"], grid=spec["grid"],
+        max_clusters=spec["max_clusters"], max_verts=spec["max_verts"],
+        backend=args.backend, shards=args.shards, capacity=cap,
+        max_batch=min(256, cap), track=True,
+    ).validate()
+    model = DDC(cfg)
+
+    t0 = time.time()
+    snap = tracking.play(model, traj.frames, window=spec["window"])
+    wall_s = time.time() - t0
+
+    tracker = model.service.tracker
+    out = {
+        "mode": "track",
+        "layout": layout,
+        "backend": args.backend,
+        "shards": args.shards,
+        "generations": snap.generation,
+        "snapshot_version": snap.version,
+        "births": snap.births,
+        "deaths": snap.deaths,
+        "merges": snap.merges,
+        "splits": snap.splits,
+        "continuations": snap.continuations,
+        "match_ms_per_refresh": round(
+            tracker.update_ms_total / max(snap.generation, 1), 3),
+        "wall_ms_per_frame": round(wall_s / steps * 1e3, 2),
+        "tracks": [{
+            "id": t.track_id,
+            "size": t.size,
+            "centroid": [round(c, 4) for c in t.centroid],
+            "speed": round(t.speed, 5),
+            "heading_deg": round(t.heading_deg, 1),
+            "motion": t.motion,
+        } for t in snap.alive],
+    }
     print(json.dumps(out))
     return out
 

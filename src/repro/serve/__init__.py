@@ -9,6 +9,9 @@ immutable versioned snapshots published at refresh, coalesced batched
 queries with pow2 shape bucketing, and the QueryResult/ServiceStats
 API contract.  hierarchy.py is the tree-of-aggregators (DESIGN.md §13)
 both engines swap in for the flat aggregator when ``agg_degree`` is set.
+tracking.py is the cluster tracking subsystem (DESIGN.md §14): stable
+track IDs, lifecycle events, and motion analytics folded over the
+refresh generations of either engine.
 
 The cluster-service re-exports are lazy (PEP 562) so importing the LM
 engine does not drag in the whole clustering stack, and vice versa.
@@ -24,6 +27,8 @@ _FAULT_EXPORTS = ("FAULT_KINDS", "FaultEvent", "FaultPlan", "FaultError",
                   "DeltaDropped", "LaneKilled", "DeltaValidationError",
                   "RecoveryError")
 _JOURNAL_EXPORTS = ("Journal",)
+_TRACKING_EXPORTS = ("ClusterTracker", "TrackSnapshot", "TrackView",
+                     "TrackEvent")
 
 
 def __getattr__(name):
@@ -45,4 +50,7 @@ def __getattr__(name):
     if name in _JOURNAL_EXPORTS:
         from repro.serve import journal
         return getattr(journal, name)
+    if name in _TRACKING_EXPORTS:
+        from repro.serve import tracking
+        return getattr(tracking, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -87,6 +87,7 @@ from repro.serve import faults as faults_mod
 from repro.serve import hierarchy
 from repro.serve import journal as journal_mod
 from repro.serve import query_tier as qt
+from repro.serve import tracking as tracking_mod
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,6 +103,9 @@ class StreamConfig:
     retry_backoff: float = 0.0      # seconds; doubles per retry round
     journal_limit: int = 1024       # per-shard WAL entries before compaction
     agg_degree: Optional[int] = None  # None: flat aggregator; >=2: tree fan-in
+    track: bool = False             # cluster tracking fold (DESIGN.md §14)
+    track_history: int = 16         # per-track motion-history ring length
+    match_min_overlap: float = 0.0  # tighten the match gate, in [0, 1)
     ddc: ddc.DDCConfig = dataclasses.field(default_factory=ddc.DDCConfig)
 
 
@@ -290,6 +294,15 @@ class ShardControlPlane:
         # ingest/evict — a held snapshot is stale but consistent.
         self._snapshot: Optional[qt.Snapshot] = None
         self._snapshot_version = 0
+        # Cluster tracking (DESIGN.md §14): a pure fold over the merged
+        # generations, observed at refresh (post-gate only, so faulted
+        # and fault-free runs fold identical inputs).
+        self._tracker: Optional[tracking_mod.ClusterTracker] = None
+        self._track_snapshot: Optional[tracking_mod.TrackSnapshot] = None
+        if scfg.track:
+            self._tracker = tracking_mod.ClusterTracker(
+                self.cfg, history=scfg.track_history,
+                min_overlap=scfg.match_min_overlap)
 
     # -- data-plane hooks ---------------------------------------------------
 
@@ -442,6 +455,23 @@ class ShardControlPlane:
         """Evict every live point from ``shard``."""
         self._check_shard(shard)
         return self._apply_kill(shard, self._live[shard].copy())
+
+    def window_ts(self) -> Tuple[Optional[float], Optional[float]]:
+        """(oldest, newest) live ingest timestamps across all shards,
+        from the host timestamp mirrors — the observable window age for
+        TTL/sliding-window deployments.  (None, None) when no point is
+        live, distinguishing "empty" from a genuine t=0 stamp."""
+        lo: Optional[float] = None
+        hi: Optional[float] = None
+        for s in range(self.scfg.shards):
+            live = self._live[s]
+            if not live.any():
+                continue
+            ts = self._ts[s][live]
+            tmin, tmax = float(ts.min()), float(ts.max())
+            lo = tmin if lo is None else min(lo, tmin)
+            hi = tmax if hi is None else max(hi, tmax)
+        return lo, hi
 
     # -- query routing ------------------------------------------------------
 
@@ -710,8 +740,38 @@ class ShardControlPlane:
         """Rejoin every quarantined shard; returns the recovered list."""
         return [s for s in sorted(self._quarantined) if self.recover(s)]
 
-    def refresh(self, mode: str | None = None, force: bool = False):
+    def refresh(self, mode: str | None = None, force: bool = False,
+                track: bool | None = None):
         raise NotImplementedError
+
+    # -- cluster tracking (DESIGN.md §14) -----------------------------------
+
+    @property
+    def tracker(self) -> Optional[tracking_mod.ClusterTracker]:
+        return self._tracker
+
+    def track_snapshot(self) -> Optional[tracking_mod.TrackSnapshot]:
+        """The ``TrackSnapshot`` cut alongside the last published read
+        view — same version, so labels+tracks reads are consistent.
+        None before the first refresh or with tracking disabled."""
+        return self._track_snapshot
+
+    def _track_update(self, track: bool | None) -> None:
+        """Fold the freshly merged generation into the tracker.
+
+        ``track=None`` (the default) folds iff tracking is enabled and
+        no shard is quarantined: the tracker observes only *post-gate*
+        complete generations, so a faulted run and its fault-free twin
+        fold identical inputs and their histories stay bit-identical
+        (the §11 chaos contract extended to tracking).  ``track=False``
+        skips the fold for this refresh; ``track=True`` forces it."""
+        if self._tracker is None or self._global is None:
+            return
+        if track is None:
+            track = not self._quarantined
+        if not track:
+            return
+        self._tracker.update(self._batch, self._maps, self._global)
 
     # -- snapshot publish/swap (DESIGN.md §12) ------------------------------
 
@@ -743,6 +803,11 @@ class ShardControlPlane:
             n_clusters=int(np.asarray(self._global.valid).sum())
             if self._global is not None else 0,
         )
+        if self._tracker is not None:
+            # Same version as the labels snapshot above: a reader pairing
+            # the two sees one consistent generation.
+            self._track_snapshot = self._tracker.snapshot(
+                version=self._snapshot_version, epoch=self.refreshes)
         return self._snapshot
 
     def snapshot(self) -> Optional["qt.Snapshot"]:
@@ -842,10 +907,13 @@ class ShardControlPlane:
             fenced_deltas=self.fenced_deltas,
             journal_entries=self._journal.entries_total,
         )
+        oldest_ts, newest_ts = self.window_ts()
         gauges = qt.ServiceGauges(
             shards=self.scfg.shards,
             capacity=self.scfg.capacity,
             n_live=self.n_live(),
+            oldest_ts=oldest_ts,
+            newest_ts=newest_ts,
             n_clusters=int(np.asarray(self._global.valid).sum())
             if self._global is not None else 0,
             snapshot_version=self._snapshot_version,
@@ -887,6 +955,8 @@ class ShardControlPlane:
         }
         if self._pair_d2 is not None:
             arrays["pair_d2"] = np.asarray(self._pair_d2)
+        if self._tracker is not None:
+            arrays.update(self._tracker.state_arrays())
         return arrays
 
     def _mirror_manifest(self) -> dict:
@@ -919,6 +989,11 @@ class ShardControlPlane:
             "degraded_queries": self.degraded_queries,
             "journal_entries": self._journal.entries_total,
             "snapshot_version": self._snapshot_version,
+            "track": self.scfg.track,
+            "track_history": self.scfg.track_history,
+            "match_min_overlap": self.scfg.match_min_overlap,
+            "tracker": self._tracker.state_manifest()
+            if self._tracker is not None else None,
         }
 
     def _restore_mirrors(self, arrays: dict, manifest: dict) -> None:
@@ -962,6 +1037,9 @@ class ShardControlPlane:
             self._journal.compact(s, self._hpts[s], self._live[s],
                                   self._ts[s], self._seq[s])
         self._journal.compactions = 0
+        # Tracker state (absent in pre-§14 snapshots -> fresh tracker).
+        if self._tracker is not None and manifest.get("tracker") is not None:
+            self._tracker.load_state(arrays, manifest["tracker"])
 
     def _restore_batch(self, arrays: dict) -> None:
         """Rebuild the aggregator ClusterSet mirror (and the per-shard
@@ -1118,12 +1196,15 @@ class ClusterService(ShardControlPlane):
 
     # -- refresh (phase 1 on dirty shards + delta/full merge) --------------
 
-    def refresh(self, mode: str | None = None, force: bool = False):
+    def refresh(self, mode: str | None = None, force: bool = False,
+                track: bool | None = None):
         """Re-cluster dirty shards and fold them into the global state.
 
         ``mode`` overrides the configured merge mode for this call;
         ``force`` recomputes even with no dirty shards (the full-remerge
-        baseline the benchmark times).  Returns the global ClusterSet.
+        baseline the benchmark times); ``track`` is the per-call
+        tracking override (``_track_update``).  Returns the global
+        ClusterSet.
         """
         mode = mode or self.scfg.merge_mode
         cfg = self.cfg
@@ -1148,6 +1229,7 @@ class ClusterService(ShardControlPlane):
         self._glabels = _global_labels(
             self._dense, jnp.stack(self._mask), self._maps)
         self._dirty -= set(staged)
+        self._track_update(track)
         self.refreshes += 1
         self._publish_snapshot()
         return self._global

@@ -259,11 +259,13 @@ class DistClusterService(ShardControlPlane):
 
     # -- refresh (lane-local phase 1 + delta exchange + merge) --------------
 
-    def refresh(self, mode: str | None = None, force: bool = False):
+    def refresh(self, mode: str | None = None, force: bool = False,
+                track: bool | None = None):
         """Re-cluster dirty lanes on their own devices, exchange ONLY
         their delta ClusterSets across the axis, and re-close the cached
         merge.  Bit-identical to ``ClusterService.refresh`` on the same
-        call sequence (and to a from-scratch re-merge)."""
+        call sequence (and to a from-scratch re-merge), including the
+        tracking fold (``track`` as in ``_track_update``)."""
         mode = mode or self.scfg.merge_mode
         k = self.scfg.shards
         dirty = sorted(self._dirty - self._quarantined.keys())
@@ -356,6 +358,7 @@ class DistClusterService(ShardControlPlane):
         maps_dev = jax.device_put(maps_np, self._sh2)
         self._glabels = self._fns["labels"](self._dense, self._mask, maps_dev)
         self._dirty -= set(staged)
+        self._track_update(track)
         self.refreshes += 1
         self._publish_snapshot()
         return self._global

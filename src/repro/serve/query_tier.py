@@ -330,6 +330,11 @@ class ServiceGauges:
     quarantined_now: Tuple[int, ...] = ()
     queue_pending: int = 0          # tier requests awaiting a drain
     jit_cache_entries: int = 0      # snapshot-query kernel compilations
+    # Window age (TTL/sliding-window deployments): the oldest and newest
+    # live ingest timestamps, None when no point is live (distinguishing
+    # an empty service from a genuine t=0 stamp).
+    oldest_ts: Optional[float] = None
+    newest_ts: Optional[float] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -377,6 +382,8 @@ class ServiceStats:
             "deadline_misses": c.deadline_misses,
             "queue_pending": g.queue_pending,
             "jit_cache_entries": g.jit_cache_entries,
+            "oldest_ts": g.oldest_ts,
+            "newest_ts": g.newest_ts,
             "refits": c.refits,
         }
         if nest_comm and self.comm:

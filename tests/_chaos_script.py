@@ -14,6 +14,13 @@ ingest schedule:
 3. **Recovery converges bit-for-bit** — after ``recover_all`` +
    refresh, global labels AND the cached pair-d2 matrix equal the
    uninterrupted twin exactly; a from-scratch full re-merge agrees.
+4. **Track histories survive the outage** (DESIGN.md §14) — tracking
+   folds only post-gate merged generations (the engine skips the fold
+   while any shard is quarantined), so a quarantined-then-recovered run
+   yields tracker state bit-identical to the fault-free twin.  The twin
+   is paused in lockstep (``refresh(track=...)``) and replays the
+   faulted run's post-recovery tracked generations, mirroring how a
+   real deployment's tracker only ever observes complete generations.
 
 Modes (argv[1]): ``quick`` (one layout, fixed seeds), ``all`` (every
 layout, hypothesis-drawn seeds when available), or a layout name.
@@ -46,8 +53,20 @@ def build(layout: str, k: int, backend: str, faults=None, agg=None):
         eps=spec["eps"], min_pts=spec["min_pts"], grid=spec["grid"],
         max_clusters=spec["max_clusters"], max_verts=spec["max_verts"],
         backend=backend, shards=k, capacity=cap,
-        max_batch=min(BATCH, cap), agg_degree=agg).validate()
+        max_batch=min(BATCH, cap), agg_degree=agg, track=True).validate()
     return DDC(cfg, faults=faults)
+
+
+def assert_trackers_equal(faulted, twin):
+    fa, fm = faulted.service.tracker.state_dict()
+    ta, tm = twin.service.tracker.state_dict()
+    assert fm == tm, \
+        f"post-recovery tracker manifest diverged\n{fm}\nvs\n{tm}"
+    assert set(fa) == set(ta)
+    for key in sorted(fa):
+        np.testing.assert_array_equal(
+            fa[key], ta[key],
+            err_msg=f"post-recovery track history diverged ({key})")
 
 
 def assert_cache_clean(svc):
@@ -72,9 +91,16 @@ def chaos_one(layout: str, k: int, backend: str, seed: int, agg=None):
     probes = pts[:: max(1, N // 32)].copy()
 
     for shard, chunk in spatial.stream_batches(pts, k, BATCH):
-        for model in (faulted, twin):
-            model.partial_fit(shard, chunk)
-            model.service.refresh()
+        # Faulted first: whether its tracker folded this generation
+        # (post-gate only: the engine skips the fold under quarantine)
+        # decides whether the twin's does, keeping both track histories
+        # aligned generation-for-generation through the outage.
+        faulted.partial_fit(shard, chunk)
+        gen_before = faulted.service.tracker.generation
+        faulted.service.refresh()
+        tracked = faulted.service.tracker.generation > gen_before
+        twin.partial_fit(shard, chunk)
+        twin.service.refresh(track=tracked)
         # (1) the fault seam may quarantine, retry, fence — but the
         # aggregator cache must never see a mangled value
         assert_cache_clean(faulted.service)
@@ -94,6 +120,17 @@ def chaos_one(layout: str, k: int, backend: str, seed: int, agg=None):
         faulted.service.refresh()
     assert not faulted.service.quarantined, faulted.service.quarantined
     assert_cache_clean(faulted.service)
+
+    # (4) the faulted run's recovery refreshes folded tracked
+    # generations of the fully-merged state; replay as many forced
+    # (bit-identical, already-converged) generations on the twin, then
+    # the whole serialised tracker state must match — same IDs, same
+    # events, same histories.  Checked BEFORE the remerge below, which
+    # legitimately folds one more generation on the faulted side.
+    while (twin.service.tracker.generation
+           < faulted.service.tracker.generation):
+        twin.service.refresh(force=True, track=True)
+    assert_trackers_equal(faulted, twin)
 
     np.testing.assert_array_equal(
         faulted.labels_, twin.labels_,

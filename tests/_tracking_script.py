@@ -1,0 +1,114 @@
+"""Tracking equivalence sweep (DESIGN.md §14), run under an 8-device
+CPU override by tests/test_tracking.py.
+
+For every trajectory layout × {2, 4, 8} shards, the same seeded frame
+stream is played (one refresh per frame, sliding-window eviction)
+through four deployments — stream×flat, stream×hier(2), dist×flat,
+dist×hier(2) — plus a save→load→resume arm that snapshots the stream
+model mid-run and resumes the copy.  The tracker's full serialised
+state (track IDs, history rings, lifecycle events, counters, match
+state) must be BIT-IDENTICAL across all five: tracking is a pure fold
+over the per-generation (batch contours, slot maps, global sizes),
+which are themselves bit-identical across engines and aggregator
+topologies.
+
+Modes (argv[1]): ``quick`` (one layout), ``all`` (every layout), or a
+layout name.  Prints PASS lines; any exception fails.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np
+
+from repro.data import spatial
+from repro.ddc import DDC, DDCConfig
+
+SHARD_COUNTS = (2, 4, 8)
+
+
+def build(layout: str, k: int, backend: str, agg=None) -> DDC:
+    spec = spatial.TRAJECTORY_LAYOUTS[layout]
+    cap = spatial.trajectory_capacity(spec["n_per_step"], spec["window"], k)
+    cfg = DDCConfig(
+        eps=spec["eps"], min_pts=spec["min_pts"], grid=spec["grid"],
+        max_clusters=spec["max_clusters"], max_verts=spec["max_verts"],
+        backend=backend, shards=k, capacity=cap,
+        max_batch=min(256, cap), agg_degree=agg, track=True).validate()
+    return DDC(cfg)
+
+
+def play_steps(model: DDC, frames, window: int, start: int = 0) -> None:
+    k = model.config.shards
+    for i, frame in enumerate(frames):
+        step = start + i
+        for shard, part in enumerate(np.array_split(frame, k)):
+            if len(part):
+                model.partial_fit(shard, part,
+                                  t=float(step) * np.ones(len(part)))
+        if step + 1 > window:
+            model.expire(float(step - window + 1))
+        model.service.refresh()
+
+
+def assert_tracker_equal(ref: DDC, other: DDC, what: str) -> None:
+    ra, rm = ref.service.tracker.state_dict()
+    oa, om = other.service.tracker.state_dict()
+    assert rm == om, f"{what}: tracker manifest diverged\n{rm}\nvs\n{om}"
+    assert set(ra) == set(oa), f"{what}: tracker array keys diverged"
+    for key in sorted(ra):
+        np.testing.assert_array_equal(
+            ra[key], oa[key], err_msg=f"{what}: tracker array {key!r}")
+
+
+def sweep_one(layout: str, k: int, tmpdir: str) -> None:
+    spec = spatial.TRAJECTORY_LAYOUTS[layout]
+    traj = spec["make"](steps=spec["steps"], n_per_step=spec["n_per_step"])
+    window = spec["window"]
+
+    ref = build(layout, k, "stream")
+    play_steps(ref, traj.frames, window)
+
+    for backend, agg in (("stream", 2), ("dist", None), ("dist", 2)):
+        model = build(layout, k, backend, agg=agg)
+        play_steps(model, traj.frames, window)
+        assert_tracker_equal(
+            ref, model, f"{layout} k={k} {backend}"
+            f"{' hier' if agg else ' flat'} vs stream flat")
+
+    # save→load→resume mid-run must rejoin the uninterrupted history.
+    half = len(traj.frames) // 2
+    part1 = build(layout, k, "stream")
+    play_steps(part1, traj.frames[:half], window)
+    path = os.path.join(tmpdir, f"{layout}-{k}.snap")
+    part1.save(path)
+    resumed = DDC.load(path)
+    play_steps(resumed, traj.frames[half:], window, start=half)
+    assert_tracker_equal(ref, resumed, f"{layout} k={k} save/load/resume")
+
+    snap = ref.tracks()
+    print(f"PASS {layout} k={k} gen={snap.generation} "
+          f"births={snap.births} deaths={snap.deaths} "
+          f"merges={snap.merges} splits={snap.splits} "
+          f"cont={snap.continuations}")
+
+
+def sweep(layouts) -> None:
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as tmpdir:
+        for layout in layouts:
+            for k in SHARD_COUNTS:
+                sweep_one(layout, k, tmpdir)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "quick"
+    if which == "quick":
+        sweep(["drifting_blobs"])
+    elif which == "all":
+        sweep(sorted(spatial.TRAJECTORY_LAYOUTS))
+    else:
+        sweep([which])
+    print("ALL_OK")

@@ -1,0 +1,353 @@
+"""Cluster tracking subsystem (DESIGN.md §14): stable IDs, lifecycle
+events, motion analytics, TTL interaction, and the exactness contract.
+
+The in-process tier runs on the stream backend (no device override
+needed); the full stream-vs-dist × flat-vs-hier × save/load equivalence
+sweep needs 8 devices for the dist lanes, so it runs in a subprocess
+with the CPU device-count override (tests/_tracking_script.py),
+mirroring the chaos harness pattern.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.data import spatial
+from repro.ddc import DDC, ConfigError, DDCConfig
+from repro.serve import tracking
+
+SCRIPT = os.path.join(os.path.dirname(__file__), "_tracking_script.py")
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_script(arg: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(SRC)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, SCRIPT, arg],
+        capture_output=True, text=True, timeout=1800, env=env)
+    assert proc.returncode == 0, (
+        f"{arg} failed:\n{proc.stdout}\n{proc.stderr}")
+    return proc.stdout
+
+
+def build(layout: str, k: int = 4, agg=None, **over) -> DDC:
+    spec = spatial.TRAJECTORY_LAYOUTS[layout]
+    cap = spatial.trajectory_capacity(spec["n_per_step"], spec["window"], k)
+    kw = dict(
+        eps=spec["eps"], min_pts=spec["min_pts"], grid=spec["grid"],
+        max_clusters=spec["max_clusters"], max_verts=spec["max_verts"],
+        backend="stream", shards=k, capacity=cap,
+        max_batch=min(256, cap), agg_degree=agg, track=True)
+    kw.update(over)
+    return DDC(DDCConfig(**kw).validate())
+
+
+def play(layout: str, model: DDC, **gen_over):
+    spec = spatial.TRAJECTORY_LAYOUTS[layout]
+    kw = dict(steps=spec["steps"], n_per_step=spec["n_per_step"])
+    kw.update(gen_over)
+    traj = spec["make"](**kw)
+    snap = tracking.play(model, traj.frames, window=spec["window"])
+    return traj, snap
+
+
+def tracker_state(model: DDC):
+    return model.service.tracker.state_dict()
+
+
+def assert_states_equal(a, b):
+    (aa, am), (ba, bm) = a, b
+    assert am == bm
+    assert set(aa) == set(ba)
+    for key in sorted(aa):
+        np.testing.assert_array_equal(aa[key], ba[key], err_msg=key)
+
+
+# -- trajectory generators --------------------------------------------------
+
+
+def test_trajectory_generators_deterministic():
+    for name, spec in spatial.TRAJECTORY_LAYOUTS.items():
+        t1 = spec["make"](steps=spec["steps"], n_per_step=spec["n_per_step"])
+        t2 = spec["make"](steps=spec["steps"], n_per_step=spec["n_per_step"])
+        assert len(t1.frames) == spec["steps"], name
+        assert t1.centers.shape == t1.velocities.shape
+        assert t1.centers.shape[0] == spec["steps"]
+        for f1, f2 in zip(t1.frames, t2.frames):
+            assert f1.dtype == np.float32
+            assert f1.shape == (spec["n_per_step"], 2)
+            assert (f1 >= 0).all() and (f1 <= 1).all()
+            np.testing.assert_array_equal(f1, f2)
+        np.testing.assert_array_equal(t1.centers, t2.centers)
+        np.testing.assert_array_equal(t1.velocities, t2.velocities)
+
+
+# -- stable identity + motion analytics -------------------------------------
+
+
+def test_drifting_blobs_ids_stable():
+    """The ID-stability layout: separated lanes ⇒ after the first
+    generation every transition is a continuation, and the initial
+    track IDs survive the whole run."""
+    model = build("drifting_blobs")
+    spec = spatial.TRAJECTORY_LAYOUTS["drifting_blobs"]
+    _, snap = play("drifting_blobs", model)
+    assert snap.generation == spec["steps"]
+    assert snap.births == 3 and snap.deaths == 0
+    assert snap.merges == 0 and snap.splits == 0
+    assert snap.continuations == 3 * (spec["steps"] - 1)
+    alive = snap.alive
+    assert sorted(t.track_id for t in alive) == [0, 1, 2]
+    assert all(t.born_gen == 1 and t.last_gen == snap.generation
+               for t in alive)
+
+
+def test_velocity_and_heading_match_ground_truth():
+    """Tracker velocity = centroid displacement per generation over the
+    history ring; compare against the generator's true centre path over
+    the same window (robust to wall bounces)."""
+    model = build("drifting_blobs")
+    traj, snap = play("drifting_blobs", model)
+    for t in snap.alive:
+        # Map track -> blob by final-centre proximity (gen g = step g-1).
+        b = int(np.argmin(
+            ((traj.centers[t.last_gen - 1] - t.centroid) ** 2).sum(1)))
+        g1, g0 = t.last_gen, t.last_gen - (t.hits - 1)
+        true_v = (traj.centers[g1 - 1, b] - traj.centers[g0 - 1, b]) \
+            / (g1 - g0)
+        assert abs(t.velocity[0] - true_v[0]) < 5e-3, (t.track_id, true_v)
+        assert abs(t.velocity[1] - true_v[1]) < 5e-3
+        if t.speed > 2 * model.service.tracker.speed_floor:
+            assert t.motion == tracking.MOTION_MOVING
+            true_heading = np.degrees(np.arctan2(true_v[1], true_v[0]))
+            spread = abs((t.heading_deg - true_heading + 180) % 360 - 180)
+            assert spread < 30.0
+
+
+def test_merging_crowds_merge_then_split():
+    """Two approaching crowds fuse (merge event: the smaller track dies
+    into the survivor) and separate again (split event: a new child
+    track of the survivor); the stationary bystander keeps its ID."""
+    model = build("merging_crowds")
+    traj, snap = play("merging_crowds", model)
+    assert snap.merges >= 1 and snap.splits >= 1
+    merge = next(e for e in snap.events if e.kind == "merge")
+    split = next(e for e in snap.events if e.kind == "split")
+    assert merge.gen < split.gen
+    assert merge.partner != merge.track        # absorbed into the survivor
+    assert split.track >= 3                    # child gets a brand-new ID
+    # Bystander at (0.5, 0.88): alive from generation 1 to the end.
+    by = min(snap.alive,
+             key=lambda t: (t.centroid[0] - 0.5) ** 2
+             + (t.centroid[1] - 0.88) ** 2)
+    assert by.born_gen == 1 and by.last_gen == snap.generation
+    assert by.motion == tracking.MOTION_STATIONARY
+
+
+def test_convoys_common_heading():
+    model = build("convoys")
+    traj, snap = play("convoys", model)
+    assert snap.births == 4 and snap.merges == 0 and snap.splits == 0
+    east = [t for t in snap.alive if t.centroid[1] < 0.5]
+    west = [t for t in snap.alive if t.centroid[1] >= 0.5]
+    assert len(east) == 2 and len(west) == 2
+    for t in east:
+        assert t.motion == tracking.MOTION_MOVING
+        assert abs(t.heading_deg) < 30          # eastbound ≈ 0°
+    for t in west:
+        assert t.motion == tracking.MOTION_MOVING
+        assert abs(abs(t.heading_deg) - 180) < 30   # westbound ≈ ±180°
+
+
+# -- TTL eviction × tracking (satellite: death events, no ID reuse) ---------
+
+
+def _two_blob_frame(seed, left=True, right=True, n=64):
+    rng = np.random.default_rng(seed)
+    parts = []
+    if left:
+        parts.append(spatial._disc(rng, n, 0.25, 0.5, 0.05))
+    if right:
+        parts.append(spatial._disc(rng, n, 0.75, 0.5, 0.05))
+    return np.clip(np.concatenate(parts), 0, 1).astype(np.float32)
+
+
+def _ingest(model, frame, t):
+    for shard, part in enumerate(
+            np.array_split(frame, model.config.shards)):
+        if len(part):
+            model.partial_fit(shard, part, t=float(t) * np.ones(len(part)))
+
+
+def test_ttl_eviction_death_and_no_id_reuse():
+    """Full eviction of a cluster via evict_older_than ⇒ death event;
+    track IDs are never reused: re-ingesting the same location after
+    eviction births a NEW track ID."""
+    cfg = DDCConfig(eps=0.02, min_pts=3, grid=48, max_verts=96,
+                    max_clusters=8, backend="stream", shards=2,
+                    capacity=256, max_batch=128, track=True).validate()
+    model = DDC(cfg)
+    _ingest(model, _two_blob_frame(0), t=0)
+    model.service.refresh()
+    snap = model.tracks()
+    assert snap.births == 2
+    right0 = max(snap.alive, key=lambda t: t.centroid[0])
+    left0 = min(snap.alive, key=lambda t: t.centroid[0])
+
+    # Keep the left blob alive with fresh points; the right one ages out.
+    _ingest(model, _two_blob_frame(1, right=False), t=1)
+    model.expire(1.0)          # evicts every t=0 point (all of right blob)
+    model.service.refresh()
+    snap = model.tracks()
+    assert snap.deaths == 1
+    death = next(e for e in snap.events if e.kind == "death")
+    assert death.track == right0.track_id
+    assert not snap.track(right0.track_id).alive
+    assert snap.track(left0.track_id).alive
+
+    # Re-ingesting the evicted location births a NEW ID — never a reuse.
+    _ingest(model, _two_blob_frame(2, left=False), t=2)
+    model.service.refresh()
+    snap = model.tracks()
+    reborn = max(snap.alive, key=lambda t: t.centroid[0])
+    assert reborn.track_id not in (left0.track_id, right0.track_id)
+    assert reborn.track_id == snap.next_track_id - 1
+    assert snap.births == 3
+    ids = [t.track_id for t in snap.tracks]
+    assert ids == sorted(set(ids))             # monotone, no reuse
+
+
+# -- window-age gauges (satellite: oldest_ts/newest_ts) ---------------------
+
+
+def test_window_age_gauges():
+    cfg = DDCConfig(eps=0.02, min_pts=3, grid=48, max_verts=96,
+                    max_clusters=8, backend="stream", shards=2,
+                    capacity=256, max_batch=128).validate()
+    model = DDC(cfg)
+    st = model.stats()
+    assert st.gauges.oldest_ts is None and st.gauges.newest_ts is None
+
+    _ingest(model, _two_blob_frame(0), t=5)
+    _ingest(model, _two_blob_frame(1), t=7)
+    st = model.stats()
+    assert st.gauges.oldest_ts == 5.0 and st.gauges.newest_ts == 7.0
+    d = st.as_dict()
+    assert d["oldest_ts"] == 5.0 and d["newest_ts"] == 7.0
+
+    model.expire(6.0)
+    st = model.stats()
+    assert st.gauges.oldest_ts == 7.0 and st.gauges.newest_ts == 7.0
+
+    model.expire(100.0)        # window empty again
+    st = model.stats()
+    assert st.gauges.oldest_ts is None and st.gauges.newest_ts is None
+
+
+def test_window_age_gauges_batch_backends_default_none():
+    cfg = DDCConfig(backend="host", shards=2).validate()
+    model = DDC(cfg)
+    model.fit(_two_blob_frame(0))
+    st = model.stats()
+    assert st.gauges.oldest_ts is None and st.gauges.newest_ts is None
+    assert "oldest_ts" in st.as_dict()
+
+
+# -- config plumbing / per-call override ------------------------------------
+
+
+def test_tracking_config_validation():
+    with pytest.raises(ConfigError):
+        DDCConfig(backend="host", track=True).validate()
+    with pytest.raises(ConfigError):
+        DDCConfig(backend="stream", track=True, track_history=1).validate()
+    with pytest.raises(ConfigError):
+        DDCConfig(backend="stream", match_min_overlap=1.0).validate()
+    with pytest.raises(ConfigError):
+        DDCConfig(backend="stream", match_min_overlap=-0.1).validate()
+
+
+def test_tracks_requires_tracking_enabled():
+    model = build("drifting_blobs", track=False)
+    with pytest.raises(ConfigError):
+        model.tracks()
+    host = DDC(DDCConfig(backend="host").validate())
+    with pytest.raises(ConfigError):
+        host.tracks()
+
+
+def test_per_call_track_override():
+    model = build("drifting_blobs", k=2)
+    _ingest(model, _two_blob_frame(0), t=0)
+    model.service.refresh(track=False)      # fold skipped for this call
+    assert model.service.tracker.generation == 0
+    model.service.refresh(force=True, track=True)
+    assert model.service.tracker.generation == 1
+    _ingest(model, _two_blob_frame(1), t=1)
+    model.service.refresh()                 # default: tracked (healthy)
+    assert model.service.tracker.generation == 2
+
+
+def test_track_snapshot_version_matches_labels_snapshot():
+    model = build("drifting_blobs", k=2)
+    _ingest(model, _two_blob_frame(0), t=0)
+    model.service.refresh()
+    snap = model.tracks()
+    read = model.service.snapshot()
+    assert snap.version == read.version
+    assert snap.epoch == read.epoch
+
+
+# -- exactness: flat vs hier + save/load in-process (stream) ----------------
+
+
+def test_flat_vs_hier_and_save_load_resume(tmp_path):
+    layout = "merging_crowds"
+    spec = spatial.TRAJECTORY_LAYOUTS[layout]
+    traj = spec["make"](steps=spec["steps"], n_per_step=spec["n_per_step"])
+    flat = build(layout)
+    hier = build(layout, agg=2)
+    tracking.play(flat, traj.frames, window=spec["window"])
+    tracking.play(hier, traj.frames, window=spec["window"])
+    assert_states_equal(tracker_state(flat), tracker_state(hier))
+
+    half = len(traj.frames) // 2
+    part1 = build(layout)
+    tracking.play(part1, traj.frames[:half], window=spec["window"])
+    part1.save(str(tmp_path / "snap"))
+    resumed = DDC.load(str(tmp_path / "snap"))
+    for m in (part1, resumed):
+        for i, frame in enumerate(traj.frames[half:]):
+            step = half + i
+            for shard, part in enumerate(
+                    np.array_split(frame, m.config.shards)):
+                if len(part):
+                    m.partial_fit(shard, part,
+                                  t=float(step) * np.ones(len(part)))
+            if step + 1 > spec["window"]:
+                m.expire(float(step - spec["window"] + 1))
+            m.service.refresh()
+    assert_states_equal(tracker_state(part1), tracker_state(resumed))
+    assert_states_equal(tracker_state(flat), tracker_state(resumed))
+
+
+# -- the full engine × topology × restore sweep (subprocess, 8 devices) -----
+
+
+def test_tracking_equivalence_quick():
+    """Drifting blobs × {2,4,8} shards: stream flat ≡ stream hier ≡
+    dist flat ≡ dist hier ≡ save→load→resume, bit-identical tracker
+    state (IDs, events, histories)."""
+    out = run_script("quick")
+    assert "ALL_OK" in out and out.count("PASS") == 3
+
+
+@pytest.mark.slow
+def test_tracking_equivalence_full_sweep():
+    """Every trajectory layout × {2,4,8} shards."""
+    out = run_script("all")
+    assert "ALL_OK" in out and out.count("PASS") == 9
